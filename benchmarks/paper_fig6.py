@@ -1,0 +1,42 @@
+"""Paper Fig 6: average tuple processing time on the continuous-queries
+topology, small/medium/large, × {default, model-based, DQN, actor-critic}.
+
+  python -m benchmarks.paper_fig6 [--paper-budget] [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.paper_common import Budget, compare_all
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "paper"
+
+
+def run(budget: Budget, seed: int = 0) -> list[dict]:
+    results = []
+    for app in ("cq_small", "cq_medium", "cq_large"):
+        out = compare_all(app, budget, seed)
+        out.pop("_dqn_hist"), out.pop("_ac_hist")
+        results.append(out)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-budget", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    budget = Budget.paper() if args.paper_budget else Budget.quick()
+    results = run(budget, args.seed)
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "fig6.json").write_text(json.dumps(results, indent=2))
+    print("\npaper Fig6 reference (default / model / dqn / AC, ms):")
+    print("  small  1.96 / 1.46 / 1.54 / 1.33   (paper)")
+    print("  medium 2.08 / 1.61 / 1.59 / 1.43   (paper)")
+    print("  large  2.64 / 2.12 / 2.45 / 1.72   (paper)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Figs 8 & 10: log-stream-processing and word-count (large-scale),
+× the four schedulers.
+
+  python -m benchmarks.paper_fig8_10 [--paper-budget]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.paper_common import Budget, compare_all
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "paper"
+
+
+def run(budget: Budget, seed: int = 0) -> list[dict]:
+    results = []
+    for app in ("log_stream", "word_count"):
+        out = compare_all(app, budget, seed)
+        out.pop("_dqn_hist"), out.pop("_ac_hist")
+        results.append(out)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-budget", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    budget = Budget.paper() if args.paper_budget else Budget.quick()
+    results = run(budget, args.seed)
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "fig8_10.json").write_text(json.dumps(results, indent=2))
+    print("\npaper reference (default / model / dqn / AC, ms):")
+    print("  log stream 9.61 / 7.91 / 8.19 / 7.20   (paper Fig 8)")
+    print("  word count 3.10 / 2.16 / 2.29 / 1.70   (paper Fig 10)")
+
+
+if __name__ == "__main__":
+    main()

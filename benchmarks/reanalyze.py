@@ -1,0 +1,38 @@
+"""Re-run the corrected HLO analysis over stored .hlo.zst dumps and patch
+the dry-run JSON artifacts in place (used after analyzer improvements)."""
+import json
+import pathlib
+import sys
+
+import zstandard as zstd
+
+from benchmarks.hlo_analysis import analyze
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main() -> None:
+    hlo_dir = ART / "hlo"
+    n = 0
+    for jf in sorted(ART.glob("*.json")):
+        rec = json.loads(jf.read_text())
+        if rec.get("status") != "ok":
+            continue
+        name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec.get("overrides"):
+            name += "__" + "-".join(f"{k}={v}" for k, v in
+                                    sorted(rec["overrides"].items()))
+        hf = hlo_dir / f"{name}.hlo.zst"
+        if not hf.exists():
+            print(f"missing HLO for {jf.name}", file=sys.stderr)
+            continue
+        text = zstd.ZstdDecompressor().decompress(
+            hf.read_bytes(), max_output_size=1 << 31).decode()
+        rec["corrected"] = analyze(text)
+        jf.write_text(json.dumps(rec, indent=2))
+        n += 1
+    print(f"re-analyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts (trip-count-corrected HLO analysis).
+
+  compute    = flops_per_device / peak_flops
+  memory     = hbm_bytes_per_device / hbm_bw
+  collective = wire_bytes_per_device / (links × link_bw)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(2D torus: ~4 usable links/chip; collective term uses 2 links since ring
+reductions stress one dimension at a time).
+
+Usage:
+  python -m benchmarks.roofline                # markdown table, all cells
+  python -m benchmarks.roofline --csv
+  python -m benchmarks.roofline --cell llama3-8b train_4k multi
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+LINKS = 2.0                  # effective links driving a ring collective
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per device; decode: D = tokens
+    generated per step (= batch) and forward-only (2·N·D)."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n = rec.get("param_count_active") or cfg.param_count(active_only=True)
+    n_embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_eff = n - n_embed + cfg.vocab_size * cfg.d_model  # lm head matmul flops
+    devices = 512 if rec["mesh"] == "multi" else 256
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_eff * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_eff * tokens / devices
+    # decode: one token per sequence per step
+    return 2.0 * n_eff * shape.global_batch / devices
+
+
+def roofline_terms(rec: dict) -> dict:
+    c = rec.get("corrected") or {}
+    flops = c.get("flops") or rec.get("flops_per_device", 0.0)
+    hbm = c.get("hbm_bytes_est") or rec.get("bytes_accessed_per_device", 0.0)
+    wire = c.get("collective_wire_bytes",
+                 rec.get("collective_wire_bytes_per_device", 0.0))
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = wire / (LINKS * LINK_BW)
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    total = max(t_comp, t_mem, t_coll)
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[0],
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": (mf / flops) if flops else 0.0,
+        # roofline fraction: useful model flops per bound-step-time vs peak
+        "roofline_fraction": (mf / total / PEAK_FLOPS) if total else 0.0,
+        "hlo_flops_per_device": flops,
+        "hbm_bytes_per_device": hbm,
+        "wire_bytes_per_device": wire,
+        "peak_gib": rec["memory"]["peak_bytes_est"] / 2 ** 30,
+    }
+
+
+def load_all(tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        is_tagged = rec.get("overrides") or "__o" in f.stem
+        if tag:
+            if tag not in f.stem:
+                continue
+        elif len(f.stem.split("__")) != 3:
+            continue
+        if rec.get("status") != "ok":
+            out.append(rec)
+            continue
+        rec["_roofline"] = roofline_terms(rec)
+        out.append(rec)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def markdown_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute | memory | collective | "
+           "bottleneck | 6ND/HLO | roofline frac | peak GiB |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r.get('status')}: {r.get('reason', r.get('error', ''))[:40]} "
+                        "| | | | | | |")
+            continue
+        t = r["_roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_s(t['t_compute_s'])} | {fmt_s(t['t_memory_s'])} "
+            f"| {fmt_s(t['t_collective_s'])} | {t['bottleneck']} "
+            f"| {t['useful_flops_ratio']:.2f} | {t['roofline_fraction']:.1%} "
+            f"| {t['peak_gib']:.1f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--tag", default="", help="perf-experiment artifacts")
+    ap.add_argument("--cell", nargs=3, metavar=("ARCH", "SHAPE", "MESH"))
+    args = ap.parse_args()
+
+    recs = load_all(args.tag)
+    if args.cell:
+        recs = [r for r in recs if (r["arch"], r["shape"], r["mesh"])
+                == tuple(args.cell)]
+    if args.csv:
+        print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+              "bottleneck,useful_ratio,roofline_fraction,peak_gib")
+        for r in recs:
+            if r.get("status") != "ok":
+                continue
+            t = r["_roofline"]
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{t['t_compute_s']:.6g},{t['t_memory_s']:.6g},"
+                  f"{t['t_collective_s']:.6g},{t['bottleneck']},"
+                  f"{t['useful_flops_ratio']:.4f},"
+                  f"{t['roofline_fraction']:.4f},{t['peak_gib']:.2f}")
+    else:
+        print(markdown_table(recs))
+
+
+if __name__ == "__main__":
+    main()

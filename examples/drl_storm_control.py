@@ -1,0 +1,32 @@
+"""End-to-end driver — the paper's full control loop (its "kind" is
+cluster control, so this is the e2e example): offline training on 10k-
+scale random transitions, online learning on the large-scale topology,
+comparison against default / model-based / DQN, and a +50% workload-shift
+stress (Fig 12).
+
+  PYTHONPATH=src python examples/drl_storm_control.py [--app cq_large]
+                 [--quick]
+"""
+import argparse
+
+from benchmarks.paper_common import Budget, compare_all
+from benchmarks.paper_fig12 import run as run_shift
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="cq_large")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    budget = Budget.quick() if args.quick else Budget.paper()
+    print(f"== scheduler comparison on {args.app} ==")
+    out = compare_all(args.app, budget)
+    print(f"\n== +50% workload shift (Fig 12) ==")
+    shift = run_shift(args.app, Budget.quick() if args.quick else budget)
+    print(f"actor-critic after shift : {shift['ac_after_shift']:.2f} ms")
+    print(f"model-based after shift  : {shift['mb_after_shift']:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""The paper's technique on TPU: DRL expert->device placement for the
+Jamba MoE under skewed routing, plus straggler mitigation (DESIGN.md §6).
+
+  PYTHONPATH=src python examples/expert_placement.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import DDPGConfig, ddpg_init, jamba_placement_env, \
+    run_online_ddpg
+from repro.core.ddpg import offline_pretrain
+from repro.core.exploration import EpsilonSchedule
+from repro.fault.straggler import StragglerDetector, mitigate_with_drl
+
+
+def main() -> None:
+    env = jamba_placement_env()
+    print(f"placing {env.N} Jamba experts on {env.M} devices "
+          f"(skewed token routing, zipf {env.skew})")
+
+    cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
+                     state_dim=env.state_dim, k_nn=8, reward_scale=1.0,
+                     eps=EpsilonSchedule(decay_epochs=150))
+    key = jax.random.PRNGKey(0)
+    agent = ddpg_init(key, cfg)
+    agent = offline_pretrain(jax.random.fold_in(key, 1), agent, cfg, env,
+                             n_samples=800, n_updates=300)
+    agent, hist = run_online_ddpg(jax.random.fold_in(key, 2), env, cfg,
+                                  agent, T=200, updates_per_epoch=2)
+
+    s = env.reset(key)
+    rr = float(env.step_time_ms(env.round_robin_assignment(), s.w))
+    learned = float(env.step_time_ms(jnp.asarray(hist.final_assignment), s.w))
+    print(f"\nround-robin placement : {rr:.3f} ms/step (MoE layer)")
+    print(f"DRL placement         : {learned:.3f} ms/step "
+          f"({1 - learned / rr:+.1%})")
+
+    print("\n== straggler mitigation ==")
+    det = StragglerDetector(env.M)
+    for step in range(8):
+        for w in range(env.M):
+            det.observe(w, 1.0 if w != 5 else 2.2)   # device 5 runs slow
+    print("detected stragglers:", det.stragglers())
+    X = mitigate_with_drl(det, env, agent, cfg, jax.random.PRNGKey(9))
+    moved = int((X.argmax(-1) != hist.final_assignment.argmax(-1)).sum())
+    slow = jnp.asarray(det.speed_factors()[: env.M])
+    before = float(env.step_time_ms(jnp.asarray(hist.final_assignment),
+                                    s.w, slow))
+    after = float(env.step_time_ms(X, s.w, slow))
+    print(f"re-assigned {moved} experts; step time with straggler: "
+          f"{before:.3f} -> {after:.3f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Serve a small model with batched requests: static-batch generation plus
+the continuous-batching scheduler (slots recycle as requests finish).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.continuous import ContinuousBatcher, Request
+from repro.serve.engine import Engine, SamplingParams
+
+
+def main() -> None:
+    cfg = get_config("llama3-8b", smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    print("== static batched generation ==")
+    eng = Engine(cfg, params, max_seq=96, batch_size=4)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 1,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    out = eng.generate(jax.random.PRNGKey(2), prompts, max_new_tokens=16,
+                       sp=SamplingParams(temperature=0.8, top_k=40))
+    dt = time.time() - t0
+    print(f"generated {out.shape} tokens in {dt:.1f}s "
+          f"({out.size / dt:.1f} tok/s incl. compile)")
+    print(out[:, :8].tolist())
+
+    print("\n== continuous batching: 8 requests through 3 slots ==")
+    cb = ContinuousBatcher(cfg, params, max_seq=96, n_slots=3, eos_id=-1,
+                           sp=SamplingParams(temperature=0.7, top_k=20))
+    for rid in range(8):
+        cb.submit(Request(rid=rid, prompt=[1 + rid, 5, 9],
+                          max_new_tokens=4 + rid % 3))
+    done = cb.run(jax.random.PRNGKey(3), max_steps=200)
+    for r in done:
+        print(f"  request {r.rid}: {len(r.out)} tokens -> {r.out}")
+    print(f"served {len(done)} requests with 3 slots")
+
+
+if __name__ == "__main__":
+    main()

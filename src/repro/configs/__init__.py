@@ -1,0 +1,75 @@
+"""Architecture registry: ``--arch <id>`` resolution + shape grid.
+
+Every assigned (architecture × input shape) cell is enumerated here; the
+dry-run, roofline, and smoke tests iterate this table."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "command-r-plus-104b",
+    "llama3-8b",
+    "qwen1.5-110b",
+    "yi-34b",
+    "seamless-m4t-medium",
+    "rwkv6-7b",
+    "jamba-1.5-large-398b",
+    "phi-3-vision-4.2b",
+    "granite-moe-3b-a800m",
+    "qwen2-moe-a2.7b",
+]
+
+_MODULES = {
+    "command-r-plus-104b": "command_r_plus_104b",
+    "llama3-8b": "llama3_8b",
+    "qwen1.5-110b": "qwen15_110b",
+    "yi-34b": "yi_34b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "rwkv6-7b": "rwkv6_7b",
+    "jamba-1.5-large-398b": "jamba_15_large_398b",
+    "phi-3-vision-4.2b": "phi3_vision_42b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_enabled(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether a (arch, shape) cell runs; reason if skipped (DESIGN.md §7)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k requires sub-quadratic attention (skip: " \
+                      "pure full-attention arch)"
+    return True, ""
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch_id, shape_name, enabled, reason)."""
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = cell_enabled(cfg, s)
+            if ok or include_skipped:
+                yield a, s.name, ok, why

@@ -1,0 +1,43 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE
+every other layer.  [arXiv:2403.19887]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,             # MoE on odd positions within the period-8 block
+    attn_every=8,             # 1 attention : 7 mamba
+    attn_offset=4,
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke",
+    family="hybrid",
+    num_layers=8,             # one full period-8 block
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    num_experts=4,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    attn_every=8,
+    attn_offset=4,
+    mamba_d_state=4,
+    mamba_d_conv=4,
+)

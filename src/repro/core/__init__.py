@@ -1,0 +1,24 @@
+# The paper's primary contribution: DRL-based model-free control for
+# distributed stream data processing (and its TPU instantiation).
+from repro.core.ddpg import DDPGConfig, DDPGState, init_state as ddpg_init
+from repro.core.dqn import DQNConfig, DQNState, init_state as dqn_init
+from repro.core.agent import History, run_online_ddpg, run_online_dqn
+from repro.core.knn_projection import (
+    knn_actions_exact,
+    knn_actions_jax,
+    knn_assignments_exact,
+    nearest_assignment,
+)
+from repro.core.model_based import ModelBasedScheduler
+from repro.core.placement import ExpertPlacementEnv, jamba_placement_env
+from repro.core.round_robin import round_robin
+from repro.core import spaces
+
+__all__ = [
+    "DDPGConfig", "DDPGState", "ddpg_init",
+    "DQNConfig", "DQNState", "dqn_init",
+    "History", "run_online_ddpg", "run_online_dqn",
+    "knn_actions_exact", "knn_actions_jax", "knn_assignments_exact",
+    "nearest_assignment", "ModelBasedScheduler",
+    "ExpertPlacementEnv", "jamba_placement_env", "round_robin", "spaces",
+]

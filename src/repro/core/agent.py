@@ -1,0 +1,125 @@
+"""Unified online-learning control loops (the paper's decision-epoch loop).
+
+These drive any environment exposing the SchedulingEnv surface
+(reset / step / state_vector / random_assignment) — the DSDPS simulator or
+the TPU expert-placement environment — with either the actor-critic method
+(Algorithm 1) or the DQN baseline, producing the reward traces of
+Figs 7/9/11."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ddpg, dqn
+from repro.core.ddpg import DDPGConfig, DDPGState
+from repro.core.dqn import DQNConfig, DQNState
+
+
+@dataclasses.dataclass
+class History:
+    rewards: np.ndarray
+    latencies: np.ndarray
+    moved: np.ndarray
+    final_assignment: np.ndarray
+
+    def normalized_rewards(self) -> np.ndarray:
+        """(r - r_min)/(r_max - r_min), the paper's normalization."""
+        r = self.rewards
+        lo, hi = r.min(), r.max()
+        return (r - lo) / max(hi - lo, 1e-12)
+
+    def smoothed_rewards(self, cutoff: float = 0.05) -> np.ndarray:
+        """Forward-backward (zero-phase) low-pass filter, as in the paper
+        ([20] Gustafsson filtfilt)."""
+        from scipy.signal import butter, filtfilt
+        b, a = butter(2, cutoff)
+        r = self.normalized_rewards()
+        if len(r) < 15:
+            return r
+        return filtfilt(b, a, r)
+
+
+def run_online_ddpg(
+    key: jax.Array,
+    env,
+    cfg: DDPGConfig,
+    state: DDPGState,
+    T: int,
+    updates_per_epoch: int = 1,
+    explore: bool = True,
+) -> tuple[DDPGState, History]:
+    k_env, key = jax.random.split(key)
+    env_state = env.reset(k_env)
+    rewards, lats, moved = [], [], []
+
+    for t in range(T):
+        key, k_act, k_step, k_upd = jax.random.split(key, 4)
+        s_vec = env.state_vector(env_state)
+        action = ddpg.select_action_jit(k_act, state, cfg, s_vec, explore=explore)
+        out = env.step(k_step, env_state, action)
+        s_next = env.state_vector(out.state)
+        state = ddpg.store(state, s_vec, action.reshape(-1), out.reward, s_next,
+                           reward_scale=cfg.reward_scale)
+        for k in jax.random.split(k_upd, updates_per_epoch):
+            state, _ = ddpg.update_step(k, state, cfg)
+        state = ddpg.tick(state)
+        env_state = out.state
+        rewards.append(float(out.reward))
+        lats.append(float(out.latency_ms))
+        moved.append(int(out.moved))
+
+    return state, History(
+        rewards=np.asarray(rewards),
+        latencies=np.asarray(lats),
+        moved=np.asarray(moved),
+        final_assignment=np.asarray(env_state.X),
+    )
+
+
+def run_online_dqn(
+    key: jax.Array,
+    env,
+    cfg: DQNConfig,
+    state: DQNState,
+    T: int,
+    updates_per_epoch: int = 1,
+    explore: bool = True,
+) -> tuple[DQNState, History]:
+    k_env, key = jax.random.split(key)
+    env_state = env.reset(k_env)
+    rewards, lats, moved = [], [], []
+
+    for t in range(T):
+        key, k_act, k_step, k_upd = jax.random.split(key, 4)
+        s_vec = env.state_vector(env_state)
+        move = dqn.select_move(k_act, state, cfg, s_vec, explore=explore)
+        action = dqn.apply_move(env_state.X, move, cfg.n_machines)
+        out = env.step(k_step, env_state, action)
+        s_next = env.state_vector(out.state)
+        state = dqn.store(state, s_vec, move, out.reward, s_next,
+                          reward_scale=cfg.reward_scale)
+        for k in jax.random.split(k_upd, updates_per_epoch):
+            state, _ = dqn.update_step(k, state, cfg)
+        state = dqn.tick(state)
+        env_state = out.state
+        rewards.append(float(out.reward))
+        lats.append(float(out.latency_ms))
+        moved.append(int(out.moved))
+
+    return state, History(
+        rewards=np.asarray(rewards),
+        latencies=np.asarray(lats),
+        moved=np.asarray(moved),
+        final_assignment=np.asarray(env_state.X),
+    )
+
+
+def greedy_assignment_ddpg(key, env, cfg: DDPGConfig, state: DDPGState,
+                           env_state) -> jnp.ndarray:
+    """Deploy-time action of a trained agent (no exploration)."""
+    s_vec = env.state_vector(env_state)
+    return ddpg.select_action(key, state, cfg, s_vec, explore=False,
+                              exact_host_knn=True)

@@ -1,0 +1,38 @@
+"""Exploration policy R(â) = â + εI  (paper §3.2.1, line 9).
+
+ε is the probability of perturbing the proto-action with uniform noise
+I ~ U[0,1]^{N·M}; it decays with the decision epoch so later epochs act
+greedily.  The DQN baseline uses the standard ε-greedy over its move space."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsilonSchedule:
+    eps_start: float = 1.0
+    eps_end: float = 0.02
+    decay_epochs: int = 800
+
+    def __call__(self, epoch: jnp.ndarray) -> jnp.ndarray:
+        frac = jnp.clip(epoch.astype(jnp.float32) / self.decay_epochs, 0.0, 1.0)
+        return self.eps_start + frac * (self.eps_end - self.eps_start)
+
+
+def perturb_proto(key: jax.Array, proto: jnp.ndarray, eps: jnp.ndarray) -> jnp.ndarray:
+    """With probability eps add uniform noise I in [0, 1] to the proto-action."""
+    k_bern, k_noise = jax.random.split(key)
+    add = jax.random.bernoulli(k_bern, eps)
+    noise = jax.random.uniform(k_noise, proto.shape)
+    return jnp.where(add, proto + noise, proto)
+
+
+def epsilon_greedy(key: jax.Array, q_values: jnp.ndarray, eps: jnp.ndarray) -> jnp.ndarray:
+    """DQN move selection over flat action logits."""
+    k_bern, k_rand = jax.random.split(key)
+    explore = jax.random.bernoulli(k_bern, eps)
+    rand_a = jax.random.randint(k_rand, (), 0, q_values.shape[-1])
+    return jnp.where(explore, rand_a, jnp.argmax(q_values))

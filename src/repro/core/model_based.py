@@ -1,0 +1,117 @@
+"""Model-based predictive scheduler — the state-of-the-art baseline [25]
+(Li et al., "Performance modeling and predictive scheduling for distributed
+stream data processing", IEEE TBD 2016).
+
+[25] fits supervised regressors (SVR) for per-component processing and
+per-pair transfer delays, combines them into an end-to-end latency
+prediction for a candidate schedule, and searches assignments under the
+model's guidance.  We reproduce that architecture: a ridge regressor over
+hand-crafted per-machine load/traffic features (the information [25]
+collects from runtime statistics) + greedy move-based local search.  Its
+characteristic weakness — model bias: the feature model cannot represent
+every interaction in the real system — is exactly what the paper exploits."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dsdps.env import SchedulingEnv
+
+
+def features(env: SchedulingEnv, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Per-machine load & traffic statistics visible to [25]'s collectors.
+
+    Utilization is speed-adjusted: [25] measures *per-machine delays*, so
+    its model implicitly knows which machines are slow."""
+    p = env.params
+    n = env.N
+    w_full = jnp.zeros(n).at[jnp.asarray(p.spout_ids)].set(w)
+    lam = jnp.asarray(p.flow_solve) @ w_full
+    # component-level profiled means — the per-executor reality deviates
+    # (SimParams.service_ms), which is precisely the model bias the paper
+    # exploits (§1: "prediction for each individual component may not be
+    # accurate")
+    c_ms = jnp.asarray(p.nominal_service_ms)
+    demand = (X * (lam * c_ms / 1e3)[:, None]).sum(0)          # [M]
+    same = X @ X.T
+    bytes_per_s = (lam[:, None] * jnp.asarray(p.routing)) * \
+        jnp.asarray(p.tuple_bytes)[:, None]
+    cross = bytes_per_s * (1.0 - same)
+    out_load = (X * cross.sum(1)[:, None]).sum(0) / 1e8         # [M]
+    in_load = (X * cross.sum(0)[:, None]).sum(0) / 1e8          # [M]
+    speed = jnp.asarray(env.cluster.speed_factors())
+    util = demand / (env.cluster.cores_per_machine * speed)
+    feats = jnp.concatenate([
+        util, util ** 2, util ** 3,
+        out_load, in_load,
+        jnp.array([
+            util.max(), util.mean(),
+            out_load.max(), in_load.max(),
+            cross.sum() / 1e8,
+            w.mean() / 1e3, w.sum() / 1e4,
+        ]),
+    ])
+    return feats
+
+
+@dataclasses.dataclass
+class ModelBasedScheduler:
+    env: SchedulingEnv
+    ridge_lambda: float = 1e-3
+    theta: jnp.ndarray | None = None
+
+    # -- model fitting ------------------------------------------------------
+    def fit(self, key: jax.Array, n_samples: int = 400) -> "ModelBasedScheduler":
+        """Collect (random schedule, measured latency) pairs and fit ridge."""
+        env = self.env
+        keys = jax.random.split(key, n_samples)
+
+        speed = jnp.asarray(env.cluster.speed_factors())
+
+        @jax.jit
+        def sample_one(k):
+            k_a, k_n = jax.random.split(k)
+            X = env.random_assignment(k_a)
+            w = env.workload.init()
+            from repro.dsdps.simulator import measured_latency_ms
+            y = measured_latency_ms(k_n, X, w, env.params, env.cluster,
+                                    speed=speed, noise_sigma=env.noise_sigma)
+            return features(env, X, w), y
+
+        F, Y = jax.vmap(sample_one)(keys)
+        F = jnp.concatenate([F, jnp.ones((F.shape[0], 1))], axis=1)
+        A = F.T @ F + self.ridge_lambda * jnp.eye(F.shape[1])
+        self.theta = jnp.linalg.solve(A, F.T @ Y)
+        return self
+
+    def predict(self, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        f = features(self.env, X, w)
+        f = jnp.concatenate([f, jnp.ones(1)])
+        return f @ self.theta
+
+    # -- model-guided greedy local search ------------------------------------
+    def schedule(self, w: jnp.ndarray, X0: jnp.ndarray | None = None,
+                 sweeps: int = 3) -> jnp.ndarray:
+        env = self.env
+        n, m = env.N, env.M
+        X = env.round_robin_assignment() if X0 is None else X0
+        theta = self.theta
+
+        @jax.jit
+        def best_move_for(X, i):
+            def try_machine(j):
+                Xj = X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype))
+                f = features(env, Xj, w)
+                f = jnp.concatenate([f, jnp.ones(1)])
+                return f @ theta
+            preds = jax.vmap(try_machine)(jnp.arange(m))
+            j = jnp.argmin(preds)
+            return X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype)), preds.min()
+
+        for _ in range(sweeps):
+            for i in range(n):
+                X, _ = best_move_for(X, jnp.asarray(i))
+        return X

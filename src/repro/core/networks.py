@@ -1,0 +1,73 @@
+"""Actor / critic networks — exactly the paper's §3.2.1 shapes.
+
+Both are 2-layer fully-connected feedforward nets with 64 and 32 neurons
+and tanh activations.  The actor maps a state to a proto-action in
+[0, 1]^{N·M}; the critic maps (state, action) to a scalar Q value."""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = (64, 32)   # paper §3.2.1
+
+
+class MLPParams(NamedTuple):
+    weights: tuple
+    biases: tuple
+
+
+def init_mlp(key: jax.Array, sizes: Sequence[int]) -> MLPParams:
+    """Glorot-uniform init for a chain of Linear layers."""
+    ws, bs = [], []
+    for k, (din, dout) in zip(
+        jax.random.split(key, len(sizes) - 1), zip(sizes[:-1], sizes[1:])
+    ):
+        lim = jnp.sqrt(6.0 / (din + dout))
+        ws.append(jax.random.uniform(k, (din, dout), jnp.float32, -lim, lim))
+        bs.append(jnp.zeros((dout,), jnp.float32))
+    return MLPParams(weights=tuple(ws), biases=tuple(bs))
+
+
+def apply_mlp(params: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
+    """tanh hidden activations (paper's empirically-best choice), linear out."""
+    h = x
+    n = len(params.weights)
+    for li, (w, b) in enumerate(zip(params.weights, params.biases)):
+        h = h @ w + b
+        if li < n - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def init_actor(key: jax.Array, state_dim: int, action_dim: int) -> MLPParams:
+    return init_mlp(key, (state_dim, *HIDDEN, action_dim))
+
+
+def apply_actor(params: MLPParams, state: jnp.ndarray) -> jnp.ndarray:
+    """proto-action in [0, 1]^{action_dim} (row-simplex-ish via sigmoid)."""
+    return jax.nn.sigmoid(apply_mlp(params, state))
+
+
+def init_critic(key: jax.Array, state_dim: int, action_dim: int) -> MLPParams:
+    return init_mlp(key, (state_dim + action_dim, *HIDDEN, 1))
+
+
+def apply_critic(params: MLPParams, state: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.concatenate([state, action], axis=-1)
+    return apply_mlp(params, x)[..., 0]
+
+
+def init_qnet(key: jax.Array, state_dim: int, num_actions: int) -> MLPParams:
+    """DQN baseline: Q(s, ·) head over the restricted N×M move space."""
+    return init_mlp(key, (state_dim, *HIDDEN, num_actions))
+
+
+def apply_qnet(params: MLPParams, state: jnp.ndarray) -> jnp.ndarray:
+    return apply_mlp(params, state)
+
+
+def soft_update(target: MLPParams, online: MLPParams, tau: float) -> MLPParams:
+    """θ' ← τθ + (1−τ)θ'  (paper: τ = 0.01)."""
+    return jax.tree.map(lambda t, o: (1.0 - tau) * t + tau * o, target, online)

@@ -1,0 +1,138 @@
+"""TPU instantiation of the paper's technique: DRL expert→device placement.
+
+The paper's scheduling problem — assign N threads to M machines to minimize
+end-to-end latency — is isomorphic to placing N MoE experts onto M devices
+of a TPU slice to minimize per-step time under skewed routing and
+stragglers (DESIGN.md §3/§6).  The environment below exposes the exact
+surface `run_online_ddpg` expects, with:
+
+  state   (X, w):  expert→device assignment + per-expert token load
+  action  one-hot [N_experts, M_devices]
+  reward  −(estimated step time) from a roofline-style cost model:
+          max-device compute time (load imbalance) + all-to-all time over
+          the ICI torus with per-link contention.
+
+The cost model constants match the roofline hardware constants used in
+benchmarks/roofline.py (197 TFLOP/s bf16, 50 GB/s/link ICI)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+class PlacementState(NamedTuple):
+    X: jnp.ndarray          # [E, D] expert -> device
+    w: jnp.ndarray          # [E] tokens routed to each expert this interval
+    epoch: jnp.ndarray
+    speed: jnp.ndarray      # [D] device speed factors (straggler model)
+
+
+class PlacementStep(NamedTuple):
+    state: PlacementState
+    reward: jnp.ndarray
+    latency_ms: jnp.ndarray   # estimated step time (ms) — keeps History API
+    moved: jnp.ndarray
+
+
+@dataclasses.dataclass
+class ExpertPlacementEnv:
+    """MoE expert placement on a (ring) ICI topology."""
+
+    num_experts: int
+    num_devices: int
+    flops_per_token: float            # 2 * d_model * d_ff * 3 (gated FFN)
+    bytes_per_token: int              # activation bytes moved per routed token
+    tokens_per_step: int              # total routed tokens per step
+    skew: float = 1.0                 # Zipf exponent of expert popularity
+    jitter: float = 0.10              # per-epoch load jitter
+    seed: int = 0
+    noise_sigma: float = 0.01
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        pop = np.arange(1, self.num_experts + 1, dtype=np.float64) ** (-self.skew)
+        self._base_load = jnp.asarray(
+            rng.permutation(pop / pop.sum()) * self.tokens_per_step)
+        self.N, self.M = self.num_experts, self.num_devices
+
+    # --- SchedulingEnv surface --------------------------------------------
+    @property
+    def state_dim(self) -> int:
+        return self.N * self.M + self.N
+
+    @property
+    def action_dim(self) -> int:
+        return self.N * self.M
+
+    def round_robin_assignment(self) -> jnp.ndarray:
+        idx = np.arange(self.N) % self.M
+        return jnp.asarray(np.eye(self.M)[idx], dtype=jnp.float32)
+
+    def random_assignment(self, key: jax.Array) -> jnp.ndarray:
+        idx = jax.random.randint(key, (self.N,), 0, self.M)
+        return jax.nn.one_hot(idx, self.M, dtype=jnp.float32)
+
+    def state_vector(self, s: PlacementState) -> jnp.ndarray:
+        w_norm = s.w / (self._base_load + 1e-9)
+        return jnp.concatenate([s.X.reshape(-1), w_norm])
+
+    def reset(self, key: jax.Array, X0: jnp.ndarray | None = None) -> PlacementState:
+        X = self.round_robin_assignment() if X0 is None else X0
+        return PlacementState(
+            X=X, w=self._base_load,
+            epoch=jnp.zeros((), jnp.int32),
+            speed=jnp.ones(self.M),
+        )
+
+    # --- cost model ----------------------------------------------------------
+    def step_time_ms(self, X: jnp.ndarray, w: jnp.ndarray,
+                     speed: jnp.ndarray | None = None) -> jnp.ndarray:
+        speed = jnp.ones(self.M) if speed is None else speed
+        # compute: bottleneck device (experts execute serially per device)
+        dev_tokens = (X * w[:, None]).sum(0)                       # [D]
+        t_comp = dev_tokens * self.flops_per_token / (PEAK_FLOPS * speed)
+        # comm: tokens enter and leave each expert's device uniformly from
+        # all devices; ring ICI -> per-link bytes with average hop distance
+        cross = (w[:, None] * X * (1.0 - 1.0 / self.M)).sum(0)     # [D] tokens
+        bytes_dev = 2.0 * cross * self.bytes_per_token             # in + out
+        avg_hops = self.M / 4.0                                    # ring average
+        t_comm = bytes_dev * avg_hops / (ICI_BW * 2.0)             # 2 links/dir
+        return 1e3 * (jnp.maximum(t_comp, t_comm) + 0.25 * jnp.minimum(t_comp, t_comm)).max()
+
+    def evaluate(self, X: jnp.ndarray, w: jnp.ndarray,
+                 speed: jnp.ndarray | None = None) -> jnp.ndarray:
+        return self.step_time_ms(X, w, speed)
+
+    def step(self, key: jax.Array, s: PlacementState, action: jnp.ndarray) -> PlacementStep:
+        k_noise, k_w = jax.random.split(key)
+        moved = (jnp.abs(action - s.X).sum(-1) > 0).sum()
+        t = self.step_time_ms(action, s.w, s.speed)
+        t = t * jnp.exp(jax.random.normal(k_noise, ()) * self.noise_sigma)
+        # expert popularity drifts (routing distribution shifts during training)
+        z = jax.random.normal(k_w, s.w.shape) * self.jitter
+        w_next = s.w + 0.3 * (self._base_load * jnp.exp(z) - s.w)
+        nxt = PlacementState(X=action, w=w_next, epoch=s.epoch + 1, speed=s.speed)
+        return PlacementStep(state=nxt, reward=-t, latency_ms=t, moved=moved)
+
+    def with_straggler(self, s: PlacementState, device: int, factor: float) -> PlacementState:
+        return s._replace(speed=s.speed.at[device].set(factor))
+
+
+def jamba_placement_env(num_devices: int = 16) -> ExpertPlacementEnv:
+    """Jamba-1.5-large's 16 experts on the 16-way model axis (DESIGN.md §6)."""
+    d_model, d_ff = 8192, 24576
+    return ExpertPlacementEnv(
+        num_experts=16,
+        num_devices=num_devices,
+        flops_per_token=2.0 * 3 * d_model * d_ff,
+        bytes_per_token=2 * d_model,         # bf16 activations in+out handled in model
+        tokens_per_step=4096 * 8 * 2,        # per-pod microbatch tokens × top-2
+        skew=0.9,
+    )

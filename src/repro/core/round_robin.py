@@ -1,0 +1,20 @@
+"""Storm's default scheduler: round-robin executor→slot→machine assignment.
+
+Results in near-even workload spread with no communication awareness —
+the paper's "Default" baseline."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_robin(n_executors: int, n_machines: int,
+                alive: np.ndarray | None = None) -> jnp.ndarray:
+    """One-hot [N, M]; skips dead machines (used by fault-tolerance tests)."""
+    machines = np.arange(n_machines)
+    if alive is not None:
+        machines = machines[np.asarray(alive, dtype=bool)]
+    idx = machines[np.arange(n_executors) % len(machines)]
+    X = np.zeros((n_executors, n_machines), dtype=np.float32)
+    X[np.arange(n_executors), idx] = 1.0
+    return jnp.asarray(X)

@@ -1,0 +1,34 @@
+"""State/action-space algebra for the scheduling problem (paper §3.2).
+
+Action a ∈ {0,1}^{N×M} with row-simplex constraints Σ_j a_ij = 1;
+state s = (X, w).  Helpers here are shared by agents, tests, and the
+property-based invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def is_feasible(action: jnp.ndarray, atol: float = 1e-6) -> jnp.ndarray:
+    """Checks the MIQP-NN constraint set: binary rows summing to one."""
+    binary = jnp.all(jnp.abs(action * (1.0 - action)) < atol)
+    rows = jnp.all(jnp.abs(action.sum(-1) - 1.0) < atol)
+    return jnp.logical_and(binary, rows)
+
+
+def assignment_to_machines(action: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(action, axis=-1)
+
+
+def machines_to_assignment(machines: jnp.ndarray, n_machines: int) -> jnp.ndarray:
+    return jax.nn.one_hot(machines, n_machines, dtype=jnp.float32)
+
+
+def hamming_moves(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Number of executors whose machine differs between two assignments —
+    the deployment cost of the minimal-delta re-assignment (paper §3.1)."""
+    return (assignment_to_machines(a) != assignment_to_machines(b)).sum()
+
+
+def action_space_size(n_executors: int, n_machines: int) -> int:
+    return n_machines ** n_executors

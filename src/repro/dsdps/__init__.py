@@ -1,0 +1,12 @@
+from repro.dsdps.topology import Component, Edge, Topology
+from repro.dsdps.cluster import ClusterSpec, PAPER_CLUSTER
+from repro.dsdps.simulator import SimParams, average_tuple_time_ms, build_sim_params
+from repro.dsdps.workload import WorkloadProcess
+from repro.dsdps.env import EnvState, SchedulingEnv, StepOut
+from repro.dsdps import apps
+
+__all__ = [
+    "Component", "Edge", "Topology", "ClusterSpec", "PAPER_CLUSTER",
+    "SimParams", "average_tuple_time_ms", "build_sim_params",
+    "WorkloadProcess", "EnvState", "SchedulingEnv", "StepOut", "apps",
+]

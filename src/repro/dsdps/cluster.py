@@ -1,0 +1,69 @@
+"""Physical cluster model: machines, slots, NICs, heterogeneity, faults.
+
+Mirrors the paper's testbed: 10 worker machines (+1 Nimbus), quad-core
+2.0 GHz, 10 slots each, 1 Gbps network.  Heterogeneity / straggler
+multipliers and machine-down masks support the fault-tolerance and
+straggler-mitigation experiments."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    num_machines: int = 10
+    cores_per_machine: int = 4
+    slots_per_machine: int = 10
+    nic_gbps: float = 1.0
+    # fixed per-hop network latency (propagation + batching, ms)
+    net_base_ms: float = 0.30
+    # intra-machine (same-process) handoff cost (ms)
+    local_base_ms: float = 0.01
+    # intra-machine inter-process (localhost socket) latency (ms)
+    ipc_base_ms: float = 0.06
+    # CPU cost of serializing/deserializing one cross-machine tuple (charged
+    # to both endpoint machines) — the traffic-awareness lever of T-Storm[52]
+    ser_base_ms: float = 0.06
+    ser_ms_per_kb: float = 0.08
+    # fixed CPU burn per running worker process (JVM + GC + netty polling),
+    # in cores.  Storm's default scheduler spreads an app over ~slots
+    # processes per machine; the paper's schedulers use one per machine.
+    proc_overhead_cores: float = 0.09
+    # cross-component co-location interference: mixing executors of many
+    # DIFFERENT components on one machine thrashes icache/dcache and GC
+    # generations — effective service inflates per extra distinct
+    # component.  Aggregate demand/traffic features (what model-based
+    # collectors see) cannot express this; raw (X, w) can — one of the
+    # "many factors not fully captured by the model" (paper §1).
+    mix_penalty: float = 0.05
+    # effective CPU speed multipliers per machine: nominally identical blades
+    # differ in practice (background daemons, thermal, NUMA placement) —
+    # the model-free agent learns this from rewards; model-based partially
+    # captures it; round-robin ignores it.
+    speeds: tuple[float, ...] = (1.0, 0.92, 0.86, 1.0, 0.78, 0.97,
+                                 0.83, 0.95, 0.74, 1.0)
+
+    @property
+    def nic_bytes_per_ms(self) -> float:
+        return self.nic_gbps * 1e9 / 8.0 / 1e3
+
+    def speed_factors(self, straggler: dict[int, float] | None = None) -> np.ndarray:
+        """CPU speed multiplier per machine (<1 = slow)."""
+        f = np.asarray(self.speeds, dtype=np.float64)[: self.num_machines].copy()
+        if f.shape[0] < self.num_machines:
+            f = np.resize(f, self.num_machines)
+        if straggler:
+            for m, s in straggler.items():
+                f[m] = s
+        return f
+
+    def alive_mask(self, down: tuple[int, ...] = ()) -> np.ndarray:
+        m = np.ones(self.num_machines, dtype=bool)
+        for j in down:
+            m[j] = False
+        return m
+
+
+PAPER_CLUSTER = ClusterSpec()

@@ -1,0 +1,123 @@
+"""The scheduling environment: the decision-epoch loop of §3.1/§3.2.
+
+State   s = (X, w)   — current assignment + spout arrival rates
+Action  a ∈ {0,1}^{N×M}, row one-hot — new assignment
+Reward  r = −(measured average tuple processing time, ms)
+
+``step`` deploys the action with minimal-delta semantics (only changed
+executors are re-assigned; the deploy cost is proportional to the number of
+moved executors, modeling the re-stabilization the paper waits out), then
+measures the reward (mean of 5 noisy readings)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dsdps.cluster import ClusterSpec, PAPER_CLUSTER
+from repro.dsdps.simulator import SimParams, build_sim_params, measured_latency_ms
+from repro.dsdps.topology import Topology
+from repro.dsdps.workload import WorkloadProcess
+
+
+class EnvState(NamedTuple):
+    X: jnp.ndarray          # [N, M] one-hot assignment
+    w: jnp.ndarray          # [S] spout rates
+    epoch: jnp.ndarray      # scalar int32
+    speed: jnp.ndarray      # [M] machine speed factors (straggler model)
+
+
+class StepOut(NamedTuple):
+    state: EnvState
+    reward: jnp.ndarray
+    latency_ms: jnp.ndarray
+    moved: jnp.ndarray      # number of re-assigned executors
+
+
+@dataclasses.dataclass
+class SchedulingEnv:
+    topo: Topology
+    workload: WorkloadProcess
+    cluster: ClusterSpec = PAPER_CLUSTER
+    noise_sigma: float = 0.03
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.params: SimParams = build_sim_params(self.topo, seed=self.seed)
+        self.N = self.topo.num_executors
+        self.M = self.cluster.num_machines
+
+    # -- helpers -----------------------------------------------------------
+    def round_robin_assignment(self) -> jnp.ndarray:
+        idx = np.arange(self.N) % self.M
+        return jnp.asarray(np.eye(self.M)[idx], dtype=jnp.float32)
+
+    def storm_default_assignment(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Storm EvenScheduler: executors round-robin over slots ordered
+        machine-major — machine i%M, worker process (i//M) % slots.  Returns
+        (X, same_proc mask); executors on one machine usually land in
+        *different* processes, paying ser/deser even when co-located."""
+        idx = np.arange(self.N) % self.M
+        proc = (np.arange(self.N) // self.M) % self.cluster.slots_per_machine
+        X = np.eye(self.M)[idx].astype(np.float32)
+        same_proc = ((idx[:, None] == idx[None, :]) &
+                     (proc[:, None] == proc[None, :])).astype(np.float32)
+        n_procs = np.zeros(self.M, dtype=np.float32)
+        for j in range(self.M):
+            n_procs[j] = len(set(proc[idx == j]))
+        return jnp.asarray(X), jnp.asarray(same_proc), jnp.asarray(n_procs)
+
+    def random_assignment(self, key: jax.Array) -> jnp.ndarray:
+        idx = jax.random.randint(key, (self.N,), 0, self.M)
+        return jax.nn.one_hot(idx, self.M, dtype=jnp.float32)
+
+    def state_vector(self, s: EnvState) -> jnp.ndarray:
+        """Flattened (X, w) fed to the DNNs — exactly the paper's state."""
+        w_norm = s.w / (jnp.asarray(self.workload.base_rates) + 1e-9)
+        return jnp.concatenate([s.X.reshape(-1), w_norm])
+
+    @property
+    def state_dim(self) -> int:
+        return self.N * self.M + self.workload.num_spouts
+
+    @property
+    def action_dim(self) -> int:
+        return self.N * self.M
+
+    # -- core API ----------------------------------------------------------
+    def reset(self, key: jax.Array, X0: jnp.ndarray | None = None) -> EnvState:
+        X = self.round_robin_assignment() if X0 is None else X0
+        return EnvState(
+            X=X,
+            w=self.workload.init(),
+            epoch=jnp.zeros((), jnp.int32),
+            speed=jnp.asarray(self.cluster.speed_factors(), jnp.float32),
+        )
+
+    def evaluate(self, X: jnp.ndarray, w: jnp.ndarray,
+                 speed: jnp.ndarray | None = None,
+                 same_proc: jnp.ndarray | None = None,
+                 n_procs: jnp.ndarray | None = None) -> jnp.ndarray:
+        """Noise-free steady-state latency for an assignment (ms)."""
+        from repro.dsdps.simulator import average_tuple_time_ms
+        if speed is None:
+            speed = jnp.asarray(self.cluster.speed_factors())
+        return average_tuple_time_ms(X, w, self.params, self.cluster, speed,
+                                     same_proc=same_proc, n_procs=n_procs)
+
+    def step(self, key: jax.Array, s: EnvState, action: jnp.ndarray) -> StepOut:
+        k_noise, k_w = jax.random.split(key)
+        moved = (jnp.abs(action - s.X).sum(-1) > 0).sum()
+        lat = measured_latency_ms(
+            k_noise, action, s.w, self.params, self.cluster, s.speed,
+            noise_sigma=self.noise_sigma,
+        )
+        w_next = self.workload.step(k_w, s.w, s.epoch)
+        nxt = EnvState(X=action, w=w_next, epoch=s.epoch + 1, speed=s.speed)
+        return StepOut(state=nxt, reward=-lat, latency_ms=lat, moved=moved)
+
+    def with_straggler(self, s: EnvState, machine: int, factor: float) -> EnvState:
+        return s._replace(speed=s.speed.at[machine].set(factor))

@@ -1,0 +1,230 @@
+"""Queueing-network latency model of a Storm-like DSDPS — pure JAX.
+
+Replaces the paper's physical 10-machine cluster (see DESIGN.md §3).  For a
+scheduling solution ``X`` (one-hot executor→machine) and spout workload
+``w`` it computes the steady-state average end-to-end tuple processing time
+via:
+
+  1. flow solve           λ = (I − Rᵀ)⁻¹ w           (executor tuple rates)
+  2. CPU contention       machine utilization → processor-sharing inflation
+  3. per-executor sojourn M/M/1-PS:  T_i = s_i / (1 − ρ_i)
+  4. network              per-edge transfer delay w/ 1 Gbps NIC contention
+  5. end-to-end           reverse-topological completion-time recursion,
+                          max over parallel downstream branches (ack joins)
+
+The model is fully differentiable, jit-able, and vmap-able over candidate
+actions, which is what lets the DRL agent train thousands of epochs per
+second on CPU.  Calibrated to the paper's measured operating points
+(DESIGN.md §9)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dsdps.cluster import ClusterSpec
+from repro.dsdps.topology import Topology
+
+# Utilization is soft-clipped below 1 to keep latencies finite with useful
+# gradients: rho_eff = rho_cap * sigmoid-like saturation.
+_RHO_CAP = 0.97
+
+
+def _soft_utilization(rho: jnp.ndarray) -> jnp.ndarray:
+    """Monotone map [0, inf) -> [0, _RHO_CAP); identity-ish below ~0.8."""
+    return _RHO_CAP * jnp.tanh(rho / _RHO_CAP)
+
+
+def _congestion(rho: jnp.ndarray) -> jnp.ndarray:
+    """1/(1-rho) with the soft cap above (finite, smooth)."""
+    return 1.0 / (1.0 - _soft_utilization(rho))
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Static per-topology arrays (device constants inside jit)."""
+
+    routing: np.ndarray          # [N, N] executor routing matrix
+    flow_solve: np.ndarray       # [N, N] (I - R^T)^-1, precomputed
+    service_ms: np.ndarray       # [N] TRUE CPU ms / tuple (incl. per-
+                                 # executor jitter: JIT state, data skew,
+                                 # NUMA — invisible to component-level
+                                 # profiling, which sees nominal_service_ms)
+    nominal_service_ms: np.ndarray  # [N] component-level mean (what [25]
+                                 # and other model-based collectors measure)
+    tuple_bytes: np.ndarray      # [N]
+    spout_ids: np.ndarray        # [S] executor ids of spouts
+    exec_component: np.ndarray   # [N] component index per executor
+    # reverse-topological component schedule: list of
+    # (component_id, [downstream component ids])
+    rev_schedule: tuple[tuple[int, tuple[int, ...]], ...]
+    comp_members: tuple[tuple[int, ...], ...]   # executor ids per component
+    acker_ms: float              # fixed ack/bookkeeping overhead
+
+
+def build_sim_params(topo: Topology, seed: int = 0, acker_ms: float = 0.15,
+                     exec_jitter_sigma: float = 0.25) -> SimParams:
+    R = topo.routing_matrix(seed)
+    n = topo.num_executors
+    flow = np.linalg.inv(np.eye(n) - R.T)
+    nominal = topo.service_demand_ms()
+    rng = np.random.default_rng(seed + 104729)
+    # per-executor true cost: lognormal around the component mean (mean-1
+    # corrected) — the "many factors not captured by the model" of §1
+    jitter = np.exp(rng.normal(-exec_jitter_sigma ** 2 / 2,
+                               exec_jitter_sigma, size=n))
+    true_ms = nominal * jitter
+    nc = len(topo.components)
+    down: list[set[int]] = [set() for _ in range(nc)]
+    for e in topo.edges:
+        down[topo._index[e.src]].add(topo._index[e.dst])
+    rev = tuple(
+        (ci, tuple(sorted(down[ci]))) for ci in reversed(topo.topo_order)
+    )
+    members = tuple(tuple(topo.executor_slice(c.name)) for c in topo.components)
+    return SimParams(
+        routing=R,
+        flow_solve=flow,
+        service_ms=true_ms,
+        nominal_service_ms=nominal,
+        tuple_bytes=topo.tuple_bytes(),
+        spout_ids=topo.spout_executors,
+        exec_component=topo.executor_component,
+        rev_schedule=rev,
+        comp_members=members,
+        acker_ms=acker_ms,
+    )
+
+
+def average_tuple_time_ms(
+    X: jnp.ndarray,              # [N, M] one-hot (rows sum to 1); float ok
+    w: jnp.ndarray,              # [S] spout executor arrival rates (tuples/s)
+    params: SimParams,
+    cluster: ClusterSpec,
+    speed: jnp.ndarray | None = None,   # [M] machine speed factors
+    same_proc: jnp.ndarray | None = None,  # [N, N] same-worker-process mask
+    n_procs: jnp.ndarray | None = None,    # [M] worker processes per machine
+) -> jnp.ndarray:
+    """Average end-to-end tuple processing time in milliseconds (scalar).
+
+    ``same_proc`` distinguishes worker processes *within* a machine: tuples
+    between different processes pay serialization CPU + IPC latency even if
+    co-located (Storm semantics, exploited by [52]/[25] and the paper).
+    The paper's schedulers enforce one process per app per machine, so for
+    them ``same_proc`` defaults to the same-machine mask.  Storm's default
+    EvenScheduler spreads executors over ~10 processes/machine — pass its
+    process mask to reproduce the default baseline's overhead."""
+    R = jnp.asarray(params.routing)
+    n, m = X.shape
+    speed = jnp.ones(m) if speed is None else speed
+
+    # 1. steady-state executor tuple rates (tuples/sec)
+    w_full = jnp.zeros(n).at[jnp.asarray(params.spout_ids)].set(w)
+    lam = jnp.asarray(params.flow_solve) @ w_full                     # [N]
+
+    # edge tuple rates; machine / process locality masks
+    same_mach = X @ X.T                                               # [N, N]
+    if same_proc is None:
+        same_proc = same_mach
+    else:
+        same_proc = same_proc * same_mach   # same process => same machine
+    edge_rate = lam[:, None] * R                                      # tuples/s
+    cross_proc = edge_rate * (1.0 - same_proc)       # pays ser/deser CPU
+    cross_mach = edge_rate * (1.0 - same_mach)       # additionally uses NIC
+
+    # 2. machine CPU contention.  Demand = executor service + ser/deser CPU
+    # for every inter-process tuple (the traffic-awareness mechanism that
+    # T-Storm [52] and [25] exploit: remote transfers burn CPU on both ends).
+    c_ms = jnp.asarray(params.service_ms)                             # [N]
+    ser_ms = cluster.ser_base_ms + \
+        jnp.asarray(params.tuple_bytes) * cluster.ser_ms_per_kb / 1024.0  # [N]
+    base_demand = (X * (lam * c_ms / 1e3)[:, None]).sum(0)            # [M]
+    ser_out = (X * (cross_proc.sum(1) * ser_ms / 1e3)[:, None]).sum(0)
+    ser_in = (X * ((cross_proc * ser_ms[:, None]).sum(0) / 1e3)[:, None]).sum(0)
+    if n_procs is None:
+        # paper's schedulers: one worker process per (used) machine
+        n_procs = (X.sum(0) > 0).astype(jnp.float32)
+    proc_burn = n_procs * cluster.proc_overhead_cores                 # cores
+    # cross-component mixing interference (see ClusterSpec.mix_penalty)
+    comp_onehot = jax.nn.one_hot(jnp.asarray(params.exec_component),
+                                 int(params.exec_component.max()) + 1)
+    presence = jnp.clip(comp_onehot.T @ X, 0.0, 1.0)                  # [C, M]
+    n_comp = presence.sum(0)                                          # [M]
+    mix = 1.0 + cluster.mix_penalty * jnp.maximum(n_comp - 1.0, 0.0)
+    demand = (base_demand + ser_out + ser_in) * mix / speed + proc_burn
+    rho_cpu = demand / cluster.cores_per_machine
+    g_m = _congestion(rho_cpu)                                        # [M]
+
+    # 3. per-executor sojourn (service inflated by machine contention)
+    inflate = X @ (g_m / speed)                                       # [N]
+    s_eff = c_ms * inflate                                            # ms
+    rho_exec = lam * s_eff / 1e3
+    sojourn = s_eff * _congestion(rho_exec)                           # [N] ms
+
+    # 4. transfer delays: in-process queue < IPC < network (w/ NIC contention)
+    bytes_per_s = cross_mach * jnp.asarray(params.tuple_bytes)[:, None]
+    out_load = (X * bytes_per_s.sum(1)[:, None]).sum(0)               # [M] B/s
+    in_load = (X * bytes_per_s.sum(0)[:, None]).sum(0)                # [M] B/s
+    nic_cap = cluster.nic_bytes_per_ms * 1e3                          # B/s
+    rho_nic = jnp.maximum(out_load, in_load) / nic_cap
+    nic_g = _congestion(rho_nic)                                      # [M]
+    nic_factor = 0.5 * (X @ nic_g)[:, None] + 0.5 * (X @ nic_g)[None, :]
+    wire_ms = jnp.asarray(params.tuple_bytes)[:, None] / cluster.nic_bytes_per_ms
+    # ser/deser also adds *latency* on the tuple's own path when crossing
+    # process boundaries (it is in the critical path, not just CPU load):
+    # serialize at the source + deserialize at the destination.
+    ser_path = 2.0 * ser_ms[:, None]
+    d_edge = jnp.where(
+        same_proc > 0.5,
+        cluster.local_base_ms,
+        jnp.where(
+            same_mach > 0.5,
+            cluster.ipc_base_ms + ser_path,
+            cluster.net_base_ms + ser_path + wire_ms * nic_factor,
+        ),
+    )                                                                 # [N, N]
+
+    # 5. completion-time recursion, reverse topo order over components.
+    comp_of = params.exec_component
+    completion = sojourn  # leaves: just their own sojourn
+    for ci, downs in params.rev_schedule:
+        if not downs:
+            continue
+        src_ids = jnp.asarray(params.comp_members[ci])
+        branch_costs = []
+        for dc in downs:
+            dst_ids = jnp.asarray(params.comp_members[dc])
+            p = R[jnp.ix_(src_ids, dst_ids)]                          # [s, d]
+            p = p / jnp.maximum(p.sum(1, keepdims=True), 1e-12)
+            hop = d_edge[jnp.ix_(src_ids, dst_ids)] + completion[dst_ids][None, :]
+            branch_costs.append((p * hop).sum(1))                     # [s]
+        downstream = functools.reduce(jnp.maximum, branch_costs)
+        completion = completion.at[src_ids].add(downstream)
+
+    spout_ids = jnp.asarray(params.spout_ids)
+    w_safe = jnp.maximum(w, 0.0)
+    avg = (w_safe * completion[spout_ids]).sum() / jnp.maximum(w_safe.sum(), 1e-9)
+    return avg + params.acker_ms
+
+
+def measured_latency_ms(
+    key: jax.Array,
+    X: jnp.ndarray,
+    w: jnp.ndarray,
+    params: SimParams,
+    cluster: ClusterSpec,
+    speed: jnp.ndarray | None = None,
+    noise_sigma: float = 0.03,
+    n_measurements: int = 5,
+    same_proc: jnp.ndarray | None = None,
+    n_procs: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Noisy measurement: mean of ``n_measurements`` lognormal-perturbed
+    readings (the framework averages 5 consecutive 10s-spaced readings)."""
+    base = average_tuple_time_ms(X, w, params, cluster, speed,
+                                 same_proc=same_proc, n_procs=n_procs)
+    z = jax.random.normal(key, (n_measurements,)) * noise_sigma
+    return (base * jnp.exp(z)).mean()

@@ -1,0 +1,41 @@
+"""Workload (spout arrival-rate) processes.
+
+The state in the paper is (X, w) where w is the tuple arrival rate of each
+data source; adaptivity to w is a headline feature (Fig 12: +50% shift)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProcess:
+    """Mean-reverting multiplicative random walk around a base rate, with an
+    optional step change (Fig 12's +50% shift at a given epoch)."""
+
+    base_rates: tuple[float, ...]       # tuples/sec per spout executor
+    jitter: float = 0.05                # per-epoch lognormal sigma
+    revert: float = 0.2                 # pull toward base
+    shift_epoch: int | None = None      # epoch at which rates jump
+    shift_factor: float = 1.5
+
+    @property
+    def num_spouts(self) -> int:
+        return len(self.base_rates)
+
+    def init(self) -> jnp.ndarray:
+        return jnp.asarray(self.base_rates)
+
+    def step(self, key: jax.Array, w: jnp.ndarray, epoch: jnp.ndarray) -> jnp.ndarray:
+        base = jnp.asarray(self.base_rates)
+        if self.shift_epoch is not None:
+            base = jnp.where(epoch >= self.shift_epoch, base * self.shift_factor, base)
+        z = jax.random.normal(key, w.shape) * self.jitter
+        target = base * jnp.exp(z)
+        return w + self.revert * (target - w)
+
+
+def constant(rates: tuple[float, ...]) -> WorkloadProcess:
+    return WorkloadProcess(base_rates=rates, jitter=0.0, revert=1.0)

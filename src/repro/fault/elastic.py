@@ -1,0 +1,58 @@
+"""Elastic re-meshing: when workers die, pick the best surviving mesh and
+resume from the latest checkpoint (restore is device-count-independent —
+checkpoint/checkpointer.py stores full arrays and re-places them).
+
+Policy: keep the model axis intact if possible (TP groups span a pod's
+fast ICI; losing a chip inside a TP group forces the whole host group
+out), shrink the data axis to the largest value that fits the survivors.
+This mirrors how production jobs degrade: FSDP width shrinks, per-step
+global batch shrinks with it, and training resumes."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    @property
+    def device_count(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def plan_mesh(alive_devices: int, model_parallel: int = 16,
+              multi_pod: bool = False) -> MeshPlan:
+    """Largest (data, model) grid that fits the survivors."""
+    if alive_devices < model_parallel:
+        # degrade TP too (rare: an entire pod's worth of failures)
+        mp = 1
+        while mp * 2 <= alive_devices:
+            mp *= 2
+        model_parallel = mp
+    data = alive_devices // model_parallel
+    if multi_pod and data % 2 == 0 and data >= 2:
+        return MeshPlan((2, data // 2, model_parallel),
+                        ("pod", "data", "model"))
+    return MeshPlan((data, model_parallel), ("data", "model"))
+
+
+def make_mesh(plan: MeshPlan):
+    return jax.make_mesh(plan.shape, plan.axes)
+
+
+def resume_after_failure(checkpointer, abstract_state, policy_cls, cfg,
+                         alive_devices: int, model_parallel: int = 16):
+    """Full elastic-restart path: plan mesh -> build shardings -> restore."""
+    plan = plan_mesh(alive_devices, model_parallel)
+    mesh = make_mesh(plan)
+    policy = policy_cls(mesh, cfg)
+    shardings = policy.params_sharding(abstract_state)
+    state = checkpointer.restore(abstract_state, shardings=shardings)
+    return mesh, state, plan

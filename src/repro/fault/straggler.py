@@ -1,0 +1,66 @@
+"""Straggler detection + DRL-driven mitigation.
+
+Detection: per-worker step-time EWMA; a worker whose smoothed step time
+exceeds ``threshold`` × the cluster median is flagged.
+
+Mitigation: this is exactly the paper's control problem — re-assign work
+away from the slow machine.  For MoE models the DRL placement agent
+(core/placement.py) re-solves expert→device placement with the straggler's
+speed factor in the environment; the same DDPG machinery the paper uses
+for Storm executors re-schedules TPU experts (DESIGN.md §6)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    num_workers: int
+    alpha: float = 0.2            # EWMA smoothing
+    threshold: float = 1.5        # × median => straggler
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.num_workers)
+        self.count = np.zeros(self.num_workers, np.int64)
+
+    def observe(self, worker: int, step_time_s: float) -> None:
+        if self.count[worker] == 0:
+            self.ewma[worker] = step_time_s
+        else:
+            self.ewma[worker] = (self.alpha * step_time_s
+                                 + (1 - self.alpha) * self.ewma[worker])
+        self.count[worker] += 1
+
+    def stragglers(self) -> list[int]:
+        seen = self.count > 0
+        if seen.sum() < max(3, self.num_workers // 2):
+            return []
+        med = float(np.median(self.ewma[seen]))
+        return [w for w in range(self.num_workers)
+                if seen[w] and self.ewma[w] > self.threshold * med]
+
+    def speed_factors(self) -> np.ndarray:
+        """Relative speed estimate per worker (1.0 = median) — feeds the
+        DRL placement environment's ``speed`` vector."""
+        seen = self.count > 0
+        med = float(np.median(self.ewma[seen])) if seen.any() else 1.0
+        f = np.ones(self.num_workers)
+        f[seen] = med / np.maximum(self.ewma[seen], 1e-9)
+        return f
+
+
+def mitigate_with_drl(detector: StragglerDetector, placement_env,
+                      agent_state, agent_cfg, key):
+    """Re-run the trained DDPG placement agent against the environment with
+    observed speed factors; returns the re-assignment (one-hot [E, D])."""
+    import jax.numpy as jnp
+    from repro.core import ddpg
+
+    speeds = jnp.asarray(detector.speed_factors()[: placement_env.M])
+    state = placement_env.reset(key)
+    state = state._replace(speed=speeds)
+    s_vec = placement_env.state_vector(state)
+    return ddpg.select_action(key, agent_state, agent_cfg, s_vec,
+                              explore=False, exact_host_knn=True)

@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention kernel (GQA, causal) with explicit BlockSpec
+VMEM tiling.
+
+Grid: (batch·q_heads, S/q_blk, S/kv_blk) — the kv axis is innermost and
+accumulates into VMEM scratch (running max / sum / output block), the
+standard online-softmax schedule.  Block shapes are MXU-aligned
+(q_blk × kv_blk × head_dim multiples of 128 on real TPU); causal blocks
+above the diagonal are skipped with pl.when so no FLOPs are wasted.
+
+VMEM working set per step:
+  q (q_blk·hd) + k,v (kv_blk·hd) + scores (q_blk·kv_blk) + acc (q_blk·hd)
+  ≈ (512·128 + 2·512·128 + 512·512 + 512·128)·4B ≈ 1.8 MB  « 16 MB VMEM.
+
+Validated in interpret mode against ref.attention_ref (CPU has no TPU;
+the kernel body itself executes in Python under interpret=True)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               causal: bool, q_blk: int, kv_blk: int, scale: float,
+               n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip blocks strictly above the diagonal
+    run = (ki * kv_blk <= qi * q_blk + q_blk - 1) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                     # [q_blk, hd]
+        k = k_ref[0].astype(jnp.float32)                     # [kv_blk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (q_blk, kv_blk), 0)
+            kv_pos = ki * kv_blk + jax.lax.broadcasted_iota(jnp.int32,
+                                                            (q_blk, kv_blk), 1)
+            s = jnp.where(q_pos >= kv_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_blk", "kv_blk",
+                                             "interpret", "num_kv_heads"))
+def flash_attention_kernel(
+    q: jnp.ndarray,               # [BH, S, hd]  (batch×q_heads flattened)
+    k: jnp.ndarray,               # [BKH, S, hd] (batch×kv_heads flattened)
+    v: jnp.ndarray,
+    *,
+    num_kv_heads: int,
+    causal: bool = True,
+    q_blk: int = 128,
+    kv_blk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, S, hd = q.shape
+    BKH = k.shape[0]
+    H = BH // (BKH // num_kv_heads)      # q heads per batch
+    G = BH // BKH                         # q heads per kv head
+    q_blk = min(q_blk, S)
+    kv_blk = min(kv_blk, S)
+    n_q, n_kv = S // q_blk, S // kv_blk
+    scale = 1.0 / (hd ** 0.5)
+
+    grid = (BH, n_q, n_kv)
+    kernel = functools.partial(_fa_kernel, causal=causal, q_blk=q_blk,
+                               kv_blk=kv_blk, scale=scale, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_blk, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_blk, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+            pl.BlockSpec((1, kv_blk, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            # running max / sum / accumulator live in VMEM across kv steps
+            pltpu.VMEM((q_blk,), jnp.float32),
+            pltpu.VMEM((q_blk,), jnp.float32),
+            pltpu.VMEM((q_blk, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

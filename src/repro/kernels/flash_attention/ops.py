@@ -1,0 +1,24 @@
+"""jit'd public wrapper: [B,S,H,hd] layout in, kernel layout inside.
+
+On a real TPU backend set interpret=False; the CPU container always runs
+interpret=True (kernel body executed in Python for validation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_blk: int = 128,
+                    kv_blk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q: [B,S,H,hd]; k/v: [B,S,Hkv,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    # kernel layout: heads-major so each grid step owns one (head, q-block)
+    qk = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    o = flash_attention_kernel(qk, kk, vk, num_kv_heads=Hkv, causal=causal,
+                               q_blk=q_blk, kv_blk=kv_blk, interpret=interpret)
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, optional causal)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: [B,S,H,hd]; k/v: [B,S,Hkv,hd] -> [B,S,H,hd] (fp32 math)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)

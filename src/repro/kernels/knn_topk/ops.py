@@ -1,0 +1,4 @@
+"""jit'd wrapper for the K-NN row-reduction kernel."""
+from repro.kernels.knn_topk.kernel import row_top2_regret
+
+__all__ = ["row_top2_regret"]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the K-NN projection row-reduction kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_top2_regret_ref(proto: jnp.ndarray):
+    """proto: [N, M] -> (best_idx [N] i32, second_idx [N] i32, regret [N] f32)
+
+    regret[i] = 2·(proto[i, best] − proto[i, second]) — the cost of flipping
+    row i to its 2nd-best machine (DESIGN.md §2)."""
+    vals, idx = jax.lax.top_k(proto.astype(jnp.float32), 2)
+    regret = 2.0 * (vals[:, 0] - vals[:, 1])
+    return idx[:, 0].astype(jnp.int32), idx[:, 1].astype(jnp.int32), regret

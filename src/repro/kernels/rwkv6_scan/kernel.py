@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence (chunked scan).
+
+Grid: (B·H, T/chunk) — the chunk axis is innermost and *sequential*; the
+[hd, hd] recurrent state lives in VMEM scratch and persists across chunk
+steps of the same (batch, head) program (it is re-zeroed at chunk 0).
+Within a chunk the recurrence runs as an unrolled fori_loop over
+timesteps; each step is one rank-1 update + one [hd]·[hd,hd] contraction
+— hd=64 keeps the state tile (64·64·4B = 16 KB) and the per-chunk
+operands (4·chunk·hd·4B ≈ 128 KB at chunk=128) comfortably in VMEM.
+
+TPU adaptation note (DESIGN.md §3): CUDA RWKV kernels assign one thread
+per channel with warp-level reductions; on TPU the natural unit is the
+whole [hd, hd] state tile in VMEM with VPU outer products — same math,
+different blocking."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(w_ref, r_ref, k_ref, v_ref, u_ref, o_ref, s_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)                       # [hd]
+
+    def step(t, S):
+        w_t = w_ref[0, t].astype(jnp.float32)              # [hd]
+        r_t = r_ref[0, t].astype(jnp.float32)
+        k_t = k_ref[0, t].astype(jnp.float32)
+        v_t = v_ref[0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]                   # [hd, hd]
+        out = ((S + u[:, None] * kv) * r_t[:, None]).sum(axis=0)
+        o_ref[0, t] = out.astype(o_ref.dtype)
+        return w_t[:, None] * S + kv
+
+    s_ref[...] = jax.lax.fori_loop(0, chunk, step, s_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_kernel(
+    w: jnp.ndarray,               # [BH, T, hd] decay in (0,1)
+    r: jnp.ndarray,               # [BH, T, hd]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    u: jnp.ndarray,               # [BH, hd] (bonus, broadcast per head)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, T, hd = r.shape
+    chunk = min(chunk, T)
+    n_chunks = T // chunk
+    grid = (BH, n_chunks)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, hd), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(w, r, k, v, u)

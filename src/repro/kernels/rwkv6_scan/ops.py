@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the WKV6 kernel: [B,T,H,hd] layout in/out."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import wkv6_kernel
+
+
+def wkv6(w, r, k, v, u, *, chunk: int = 128, interpret: bool = True):
+    """w,r,k,v: [B,T,H,hd]; u: [H,hd] -> out [B,T,H,hd] fp32."""
+    B, T, H, hd = r.shape
+
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+
+    u_b = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    o = wkv6_kernel(flat(w), flat(r), flat(k), flat(v), u_b,
+                    chunk=chunk, interpret=interpret)
+    return o.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(w, r, k, v, u, S0=None):
+    """w,r,k,v: [B,T,H,hd] (w = per-step decay in (0,1)); u: [H,hd] bonus.
+    Returns (out [B,T,H,hd] fp32, S_T [B,H,hd,hd] fp32).
+
+      S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ
+      out_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    """
+    B, T, H, hd = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        w_t, r_t, k_t, v_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]            # [B,H,hd,hd]
+        out = jnp.einsum("bhij,bhi->bhj", S + u[None, :, :, None] * kv, r_t)
+        S = w_t[..., None] * S + kv
+        return S, out
+
+    seq = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (w, r, k, v))
+    S_T, out = jax.lax.scan(step, S0, seq)
+    return out.swapaxes(0, 1), S_T

@@ -1,0 +1,67 @@
+"""The paper's control loop as a launcher: train the DRL scheduler on a
+DSDPS topology (or the TPU expert-placement env) and report the schedule.
+
+  PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
+      --offline 2000 --epochs 300
+  PYTHONPATH=src python -m repro.launch.drl_control --app placement
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DDPGConfig, ddpg_init, run_online_ddpg,
+                        jamba_placement_env, round_robin)
+from repro.core.ddpg import offline_pretrain
+from repro.dsdps import SchedulingEnv, apps
+from repro.dsdps.apps import default_workload
+
+
+def build_env(app: str):
+    if app == "placement":
+        return jamba_placement_env()
+    topo = apps.ALL_APPS[app]()
+    return SchedulingEnv(topo, default_workload(topo))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="cq_small",
+                    choices=list(apps.ALL_APPS) + ["placement"])
+    ap.add_argument("--offline", type=int, default=2000,
+                    help="offline random-action samples (paper: 10,000)")
+    ap.add_argument("--offline-updates", type=int, default=500)
+    ap.add_argument("--epochs", type=int, default=300)
+    ap.add_argument("--k", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    env = build_env(args.app)
+    cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
+                     state_dim=env.state_dim, k_nn=args.k)
+    key = jax.random.PRNGKey(args.seed)
+    state = ddpg_init(key, cfg)
+
+    print(f"offline pretraining on {args.offline} random transitions ...")
+    state = offline_pretrain(jax.random.fold_in(key, 1), state, cfg, env,
+                             n_samples=args.offline,
+                             n_updates=args.offline_updates)
+
+    print(f"online learning for {args.epochs} decision epochs ...")
+    state, hist = run_online_ddpg(jax.random.fold_in(key, 2), env, cfg,
+                                  state, T=args.epochs)
+
+    w = (env.workload.init() if hasattr(env, "workload")
+         else env._base_load)
+    final = float(env.evaluate(jnp.asarray(hist.final_assignment), w))
+    rr = float(env.evaluate(env.round_robin_assignment(), w))
+    print(f"\nfinal latency {final:.3f} ms   round-robin {rr:.3f} ms   "
+          f"improvement {1 - final / rr:.1%}")
+    print("assignment (executor -> machine):",
+          hist.final_assignment.argmax(-1).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first init, and the production meshes need 512 placeholder
+# devices (dry-run ONLY — smoke tests and benches see the 1 real device).
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell:
+  jit(step, in_shardings, out_shardings).lower(<abstract args>).compile()
+must succeed; we record memory_analysis() (fits-in-HBM proof),
+cost_analysis() (FLOPs/bytes for the roofline), and the collective
+schedule parsed from the optimized HLO (bytes per collective kind).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --list
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json (incremental:
+existing artifacts are skipped unless --force)."""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# -- collective parsing -------------------------------------------------------
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# wire-bytes-per-device conventions (ring algorithms, n→large):
+#   all-reduce of shard s      -> 2s        all-gather to size g -> g
+#   reduce-scatter of input s  -> s         all-to-all of s      -> s
+#   collective-permute of s    -> s
+_WIRE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    by_kind: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        d = by_kind.setdefault(kind, {"count": 0, "result_bytes": 0,
+                                      "wire_bytes": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += b
+        d["wire_bytes"] += b * _WIRE_FACTOR[kind]
+    return by_kind
+
+
+# -- per-cell dry run ---------------------------------------------------------
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None) -> dict:
+    from repro.configs import SHAPES, cell_enabled, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import abstract_state_for, input_specs, train_setup
+    from repro.models import lm
+    from repro.sharding.policy import ShardingPolicy
+    from repro.train.trainer import make_train_step
+
+    cfg = get_config(arch_id)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **{k: v for k, v in overrides.items()
+                                  if hasattr(cfg, k)})
+    shape = SHAPES[shape_name]
+    ok, why = cell_enabled(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    fsdp = True
+    if overrides and "fsdp" in overrides:
+        fsdp = bool(overrides["fsdp"])
+    policy = ShardingPolicy(mesh, cfg, fsdp=fsdp)
+    kind, args = input_specs(arch_id, shape_name, cfg)
+
+    from repro.sharding import ctx
+    t0 = time.time()
+    with mesh, ctx.use_mesh(mesh):
+        if kind == "prefill":
+            # inference prefill: forward-only, emits the prompt KV cache
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            step_fn = lm.prefill_forward(cfg)
+            params = lm.abstract_params(cfg)
+            params_sh = policy.params_sharding(params)
+            batch_sh = policy.batch_sharding(args["batch"])
+            jitted = jax.jit(step_fn, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params, args["batch"])
+        elif kind == "train":
+            setup = train_setup(cfg, shape)
+            if overrides and "micro_batches" in overrides:
+                import dataclasses as _dc
+                setup = _dc.replace(setup, micro_batches=overrides["micro_batches"])
+            if overrides and "compress_grads" in overrides:
+                import dataclasses as _dc
+                setup = _dc.replace(setup, compress_grads=overrides["compress_grads"])
+            from repro.train.trainer import abstract_train_state
+            state = abstract_train_state(cfg, setup)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.train import optimizer as opt_lib
+            from repro.train.trainer import TrainState
+
+            # the full train state mirrors the parameter specs: AdamW
+            # moments and EF residuals shard exactly like their parameters
+            params_sh = policy.params_sharding(state.params)
+            ef_sh = jax.tree.map(
+                lambda s, l: NamedSharding(mesh, P()) if l.ndim == 0 else s,
+                params_sh, state.ef_residual)
+            state_sharding = TrainState(
+                step=NamedSharding(mesh, P()),
+                params=params_sh,
+                opt=opt_lib.AdamState(step=NamedSharding(mesh, P()),
+                                      mu=params_sh, nu=params_sh),
+                ef_residual=ef_sh,
+            )
+            batch_sh = policy.batch_sharding(args["batch"])
+            step_fn = make_train_step(cfg, setup)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sharding, batch_sh),
+                             out_shardings=(state_sharding, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, args["batch"])
+        else:  # decode
+            step_fn = lm.serve_step(cfg)
+            params = lm.abstract_params(cfg)
+            params_sh = policy.params_sharding(params)
+            cache_sh = policy.cache_sharding(args["cache"])
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            tok_sh = NamedSharding(
+                mesh, P(policy.axes.dp
+                        if args["tokens"].shape[0] % policy.dp_size == 0
+                        else None, None))
+            logits_sh = None
+            jitted = jax.jit(step_fn,
+                             in_shardings=(params_sh, cache_sh, tok_sh),
+                             out_shardings=(logits_sh, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, args["cache"], args["tokens"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    # trip-count-corrected analysis (XLA counts while bodies once; scans
+    # would otherwise undercount by microbatch × layer trip counts)
+    try:
+        from benchmarks.hlo_analysis import analyze as hlo_analyze
+        corrected = hlo_analyze(hlo)
+    except Exception as e:  # pragma: no cover
+        corrected = {"error": f"{type(e).__name__}: {e}"}
+
+    # keep the compressed HLO for offline re-analysis (§Perf iterations)
+    try:
+        import zstandard as zstd
+        hlo_path = ART_DIR / "hlo"
+        hlo_path.mkdir(parents=True, exist_ok=True)
+        name = f"{arch_id}__{shape_name}__{mesh_kind}"
+        if overrides:
+            name += "__" + "-".join(f"{k}={v}" for k, v in sorted(overrides.items()))
+        (hlo_path / f"{name}.hlo.zst").write_bytes(
+            zstd.ZstdCompressor(level=3).compress(hlo.encode()))
+    except Exception:
+        pass
+
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": kind,
+        "status": "ok",
+        "devices": int(jax.device_count()) if mesh_kind == "multi" else 256,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "overrides": overrides or {},
+        # per-device numbers (XLA reports per-participant in SPMD)
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "collectives": coll,
+        "collective_wire_bytes_per_device": sum(
+            d["wire_bytes"] for d in coll.values()),
+        # trip-count-corrected (benchmarks/hlo_analysis.py) — use THESE for
+        # the roofline; raw cost_analysis counts while bodies once
+        "corrected": corrected,
+        "param_count": cfg.param_count(),
+        "param_count_active": cfg.param_count(active_only=True),
+    }
+    return result
+
+
+def cell_path(arch_id: str, shape_name: str, mesh_kind: str,
+              tag: str = "") -> pathlib.Path:
+    suffix = f"__{tag}" if tag else ""
+    return ART_DIR / f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for perf expts")
+    ap.add_argument("--override", default="",
+                    help="k=v,... ModelConfig/TrainSetup overrides (perf expts)")
+    args = ap.parse_args()
+
+    from repro.configs import all_cells
+
+    if args.list:
+        for a, s, ok, why in all_cells(include_skipped=True):
+            print(f"{a:26s} {s:12s} {'RUN' if ok else 'SKIP  ' + why}")
+        return
+
+    overrides = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        overrides[k] = (v == "True" if v in ("True", "False")
+                        else int(v) if v.isdigit() else v)
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a, s, ok, _ in all_cells() if ok]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    for arch_id, shape_name in cells:
+        out = cell_path(arch_id, shape_name, args.mesh, args.tag)
+        if out.exists() and not args.force:
+            print(f"SKIP (cached) {out.name}")
+            continue
+        print(f"=== {arch_id} × {shape_name} × {args.mesh} ===", flush=True)
+        try:
+            res = run_cell(arch_id, shape_name, args.mesh, overrides or None)
+        except Exception as e:  # record failures — they are bugs to fix
+            res = {"arch": arch_id, "shape": shape_name, "mesh": args.mesh,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        out.write_text(json.dumps(res, indent=2))
+        status = res["status"]
+        if status == "ok":
+            gb = res["memory"]["peak_bytes_est"] / 2**30
+            print(f"  ok: {res['flops_per_device']:.3e} flops/dev, "
+                  f"peak {gb:.2f} GiB/dev, "
+                  f"coll {res['collective_wire_bytes_per_device']:.3e} B/dev, "
+                  f"compile {res['compile_s']}s", flush=True)
+        else:
+            print(f"  {status}: {res.get('error', res.get('reason'))}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh construction (multi-pod dry-run §1).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state.  The single-pod mesh is 16×16 = 256 chips
+(v5e pod); multi-pod adds a leading "pod" axis (2×16×16 = 512 chips)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh over the single real CPU device — used by smoke
+    tests and examples so the same pjit code paths run un-sharded."""
+    return jax.make_mesh((1, 1), ("data", "model"))

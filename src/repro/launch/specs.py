@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run §2) and the
+per-cell training setup.
+
+No device allocation happens here: batches, decode caches, and the full
+train state (params + AdamW moments + EF residuals) are abstract shapes
+that ``jax.jit(...).lower()`` consumes directly."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train.trainer import TrainSetup, abstract_train_state
+
+# cross-attention memory length used by enc-dec decode cells (the encoder
+# side of seamless; independent of the 32k/500k self-cache stress length)
+ENCDEC_MEMORY_LEN = 4096
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_setup(cfg: ModelConfig, shape: ShapeSpec) -> TrainSetup:
+    """Per-cell training configuration (microbatching + optimizer dtypes)."""
+    big = cfg.param_count() > 5e10
+    return TrainSetup(
+        micro_batches=8 if shape.global_batch >= 64 else 1,
+        moment_dtype="bfloat16" if big else "float32",
+    )
+
+
+def input_specs(arch_id: str, shape_name: str, cfg: ModelConfig | None = None):
+    """Returns (kind, abstract_args) for the cell's step function:
+
+      train  -> {"batch": {tokens, targets[, frames | frontend_embeds]}}
+      decode -> {"cache": <abstract cache>, "tokens": [B, 1]}
+      prefill-> {"batch": like train (forward only)}
+    """
+    cfg = cfg or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            batch = {
+                "frames": _sds((B, S, cfg.d_model), dt),     # frontend STUB
+                "tokens": _sds((B, S), jnp.int32),
+                "targets": _sds((B, S), jnp.int32),
+            }
+        elif cfg.family == "vlm":
+            P = cfg.frontend_positions
+            batch = {
+                "frontend_embeds": _sds((B, P, cfg.d_model), dt),  # CLIP STUB
+                "tokens": _sds((B, S - P), jnp.int32),
+                "targets": _sds((B, S - P), jnp.int32),
+            }
+        else:
+            batch = {
+                "tokens": _sds((B, S), jnp.int32),
+                "targets": _sds((B, S), jnp.int32),
+            }
+        return shape.kind, {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    enc_len = ENCDEC_MEMORY_LEN if cfg.family == "encdec" else 0
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch=B, max_seq=S, enc_len=enc_len))
+    tokens = _sds((B, 1), jnp.int32)
+    return "decode", {"cache": cache, "tokens": tokens}
+
+
+def abstract_state_for(cfg: ModelConfig, shape: ShapeSpec):
+    return abstract_train_state(cfg, train_setup(cfg, shape))

@@ -1,0 +1,184 @@
+"""GQA attention: chunked (flash-style) training/prefill path, cached decode.
+
+The chunked path is the pure-JAX twin of kernels/flash_attention (same
+online-softmax algorithm, same tiling) — it bounds live memory to one
+(q_chunk × kv_chunk) score tile per head instead of the full S×S matrix,
+which is what lets 32k prefill compile inside a 16 GB HBM budget.  Causal
+chunks above the diagonal are *not computed at all* (the q-chunk loop is
+unrolled in Python, inner kv scan runs only over j ≤ i), so compiled HLO
+FLOPs stay ≈ the useful S²/2 — this matters for the roofline's
+MODEL_FLOPS/HLO_FLOPS ratio."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _attend_chunk(q, k, v, mask, scale):
+    """One (q_tile × kv_tile) online-softmax step.
+
+    q: [B, Tq, H, hd]; k/v: [B, Tk, Hkv, hd]; mask: [Tq, Tk] or None.
+    Returns unnormalized (o, m, l) contributions in fp32."""
+    B, Tq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Tq, Hkv, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale        # [B,Tq,Hkv,G,Tk]
+    if mask is not None:
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)                                    # [B,Tq,Hkv,G]
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def _merge(acc, new):
+    """Merge two online-softmax partials."""
+    o1, m1, l1 = acc
+    o2, m2, l2 = new
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    return (o1 * a1[..., None] + o2 * a2[..., None],
+            m,
+            l1 * a1 + l2 * a2)
+
+
+def flash_attention(
+    q: jnp.ndarray,               # [B, S, H, hd]
+    k: jnp.ndarray,               # [B, S, Hkv, hd]
+    v: jnp.ndarray,               # [B, S, Hkv, hd]
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    nq, nkv = S // q_chunk, S // kv_chunk
+
+    outs = []
+    for i in range(nq):                       # unrolled: exact causal FLOPs
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        q_pos = i * q_chunk + jnp.arange(q_chunk)
+        # kv chunks fully below the diagonal (no mask needed)
+        hi = ((i + 1) * q_chunk) // kv_chunk if causal else nkv
+        full = (i * q_chunk) // kv_chunk if causal else nkv
+
+        def kv_step(carry, j):
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+            return _merge(carry, _attend_chunk(qi, kj, vj, None, scale)), None
+
+        G = H // Hkv
+        init = (
+            jnp.zeros((B, q_chunk, Hkv, G, hd), jnp.float32),
+            jnp.full((B, q_chunk, Hkv, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, q_chunk, Hkv, G), jnp.float32),
+        )
+        acc, _ = jax.lax.scan(kv_step, init, jnp.arange(full)) if full > 0 \
+            else (init, None)
+        if causal:
+            # diagonal chunks need the triangular mask
+            for j in range(full, hi):
+                kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+                vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+                kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+                mask = q_pos[:, None] >= kv_pos[None, :]
+                acc = _merge(acc, _attend_chunk(qi, kj, vj, mask, scale))
+        o, m, l = acc
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        outs.append(o.reshape(B, q_chunk, H, hd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def flash_attention_seqpar(
+    q: jnp.ndarray,               # [B, S, H, hd]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Sequence-parallel attention: q rows sharded over the model axis,
+    K/V replicated (ring-attention-style work split, gather done by GSPMD).
+
+    Used when the head count doesn't divide the model axis (yi-34b's 56
+    heads, granite's 24): head-dim sharding would turn every score matmul
+    into a partial-sum all-reduce of the full score tensor, which measured
+    ~100× worse in the dry-run.  Trade-off: no causal chunk skipping
+    (every kv chunk is visited), so prefill FLOPs are ~2× the causal
+    minimum — still 8× better than replicated compute."""
+    from repro.sharding import ctx
+
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kv_chunk = min(kv_chunk, S)
+    nkv = S // kv_chunk
+    q = ctx.constrain(q, "dp", "tp", None, None)
+    q_pos = jnp.arange(S)
+
+    def shard(t):
+        return ctx.constrain(t, "dp", "tp", None, None, None)
+
+    def kv_step(carry, j):
+        kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+        mask = None
+        if causal:
+            kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+        new = _attend_chunk(q, kj, vj, mask, scale)
+        o, m, l = _merge(carry, new)
+        return (shard(o), ctx.constrain(m, "dp", "tp", None, None),
+                ctx.constrain(l, "dp", "tp", None, None)), None
+
+    init = (
+        shard(jnp.zeros((B, S, Hkv, G, hd), jnp.float32)),
+        ctx.constrain(jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32),
+                      "dp", "tp", None, None),
+        ctx.constrain(jnp.zeros((B, S, Hkv, G), jnp.float32),
+                      "dp", "tp", None, None),
+    )
+    (o, m, l), _ = jax.lax.scan(kv_step, init, jnp.arange(nkv))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,               # [B, 1, H, hd] — one new token
+    k_cache: jnp.ndarray,         # [B, Smax, Hkv, hd]
+    v_cache: jnp.ndarray,         # [B, Smax, Hkv, hd]
+    cache_len: jnp.ndarray,       # scalar int32 — valid prefix length
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale   # [B,Hkv,G,Smax]
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where(pos[None, None, None, :] < cache_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_kv_cache(k_cache, v_cache, k_new, v_new, cache_len):
+    """Insert [B, T, Hkv, hd] new keys/values at position cache_len."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype),
+                                                  cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype),
+                                                  cache_len, axis=1)
+    return k_cache, v_cache

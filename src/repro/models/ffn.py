@@ -1,0 +1,127 @@
+"""FFN layers: dense SwiGLU and routed top-k MoE (+ shared experts).
+
+The MoE uses the GShard-style capacity discipline but dispatches via
+sort-free rank-scatter: tokens are ranked within their expert by a cumsum
+over the one-hot routing matrix, then scattered into a per-expert
+[E, C, d] buffer, processed with stacked-expert einsums, and combined
+back with the router weights.  Per-expert compute is exactly capacity-
+bounded — compiled FLOPs stay ~E_active/E_total of the dense-all-experts
+formulation, which is what the roofline's useful-FLOPs ratio wants.
+Experts shard over the "model" mesh axis when divisible (true EP — the
+placement controller in core/placement.py owns that mapping, DESIGN.md
+§6); otherwise each expert's d_ff shards (TP fallback)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+def dense_ffn_init(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    return nn.swiglu_init(key, d, d_ff, dtype=dtype)
+
+
+def dense_ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return nn.swiglu(p, x)
+
+
+def moe_init(key, d: int, d_ff: int, num_experts: int, num_shared: int,
+             dtype=jnp.bfloat16) -> dict:
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    p = {
+        "router": {"w": (jax.random.normal(k_r, (d, num_experts), jnp.float32)
+                         * 0.02).astype(jnp.float32)},   # router stays fp32
+        "gate": (jax.random.normal(k_g, (num_experts, d, d_ff), jnp.float32)
+                 * scale).astype(dtype),
+        "up": (jax.random.normal(k_u, (num_experts, d, d_ff), jnp.float32)
+               * scale).astype(dtype),
+        "down": (jax.random.normal(k_d, (num_experts, d_ff, d), jnp.float32)
+                 * scale).astype(dtype),
+    }
+    if num_shared:
+        p["shared"] = nn.swiglu_init(k_s, d, num_shared * d_ff, dtype=dtype)
+    return p
+
+
+def moe_ffn(
+    p: dict,
+    x: jnp.ndarray,                  # [B, S, d]
+    *,
+    experts_per_token: int,
+    capacity_factor: float = 1.25,
+    router_aux_coef: float = 0.01,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B,S,d], aux_loss scalar).
+
+    Dispatch is *per sequence* (vmapped over batch): ranks/capacity are
+    computed within each batch row, so with batch sharded over dp no
+    cross-data-parallel communication is needed — only the expert (tp)
+    axis moves tokens, exactly the EP all-to-all pattern."""
+    from repro.sharding import ctx
+
+    B, S, d = x.shape
+    E = p["gate"].shape[0]
+    K = experts_per_token
+    cap = int(capacity_factor * S * K / E) + 1
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"]["w"])                           # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                          # [B,S,K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean((0, 1))                                         # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0) / (B * S * K)
+    aux = router_aux_coef * E * jnp.sum(me * ce)
+
+    def dispatch_one(xs, es):
+        """xs: [S,d]; es: [S,K] -> (buf [E,cap+1,d], slot [S*K], keep)."""
+        flat_e = es.reshape(-1)                                     # [S*K]
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        rank = jnp.cumsum(onehot, axis=0) - onehot
+        my_rank = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
+        keep = my_rank < cap
+        slot = jnp.where(keep, my_rank, cap)                        # drop bin
+        buf = jnp.zeros((E, cap + 1, d), xs.dtype)
+        tok_idx = jnp.repeat(jnp.arange(S), K)
+        buf = buf.at[flat_e, slot].add(xs[tok_idx])
+        return buf, slot, keep, flat_e, tok_idx
+
+    buf, slot, keep, flat_e, tok_idx = jax.vmap(dispatch_one)(x, top_e)
+    ep = E % max(ctx.axis_size("tp"), 1) == 0
+    if ep:
+        # expert parallelism: experts live on the model axis
+        buf = ctx.constrain(buf, "dp", "tp", None, None)            # [B,E,C,d]
+    else:
+        buf = ctx.constrain(buf, "dp", None, None, None)
+
+    # ---- stacked-expert FFN (E is a batch dim -> EP-local when sharded;
+    # non-divisible expert counts fall back to TP over each expert's d_ff)
+    h = jnp.einsum("becd,edf->becf", buf, p["gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["up"])
+    if ep:
+        h = ctx.constrain(h, "dp", "tp", None, None)
+        u = ctx.constrain(u, "dp", "tp", None, None)
+    else:
+        h = ctx.constrain(h, "dp", None, None, "tp")
+        u = ctx.constrain(u, "dp", None, None, "tp")
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u, p["down"])
+    y = ctx.constrain(y, "dp", "tp" if ep else None, None, None)
+
+    def combine_one(yb, slot, keep, flat_e, tok_idx, wk):
+        gathered = yb[flat_e, slot]                                 # [S*K, d]
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        out = jnp.zeros((S, d), yb.dtype).at[tok_idx].add(
+            gathered * wk.reshape(-1)[:, None].astype(yb.dtype))
+        return out
+
+    out = jax.vmap(combine_one)(y, slot, keep, flat_e, tok_idx, top_w)
+    out = ctx.constrain(out, "dp", None, None)
+
+    if "shared" in p:
+        out = out + nn.swiglu(p["shared"], x)
+    return out, aux

@@ -1,0 +1,560 @@
+"""Unified language-model builder for all assigned architectures.
+
+One parameter layout + three entry points per config:
+
+  init_params(cfg, key)                  -> param pytree (bf16)
+  train_loss(cfg)(params, batch)         -> (loss, metrics)     [train_4k]
+  serve_step(cfg)(params, cache, tok, t) -> (logits, new_cache) [decode_*]
+  encode(cfg)(params, frames)            -> encoder memory      [encdec]
+
+Layers execute as ``lax.scan`` over identical *blocks* (cfg.block_program()),
+each block rematerialized, so compiled HLO stays small and backward memory
+is O(block boundaries).  Families:
+
+  dense   — GQA transformer (llama3 / qwen1.5 / yi / command-r parallel-block)
+  moe     — + routed top-k FFN (granite / qwen2-moe shared+routed)
+  ssm     — RWKV6 Finch (attention-free)
+  hybrid  — Jamba: 1:7 attn:mamba, MoE every 2nd layer
+  encdec  — seamless-m4t backbone (frame-embedding frontend stub)
+  vlm     — phi-3-vision backbone (patch-embedding frontend stub)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_lib
+from repro.models import nn, ssm
+from repro.models.config import ModelConfig
+from repro.sharding import ctx
+
+Params = dict
+Batch = dict
+
+
+def _dt(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ===========================================================================
+# Parameter construction
+# ===========================================================================
+def _attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.linear_init(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": nn.linear_init(ks[1], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": nn.linear_init(ks[2], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": nn.linear_init(ks[3], h * hd, d, dtype=dtype),
+    }
+
+
+def _mixer_init(key, cfg: ModelConfig, mixer: str, dtype) -> Params:
+    if mixer == "attn":
+        return _attn_init(key, cfg, dtype)
+    if mixer == "mamba":
+        return ssm.mamba_init(key, cfg.d_model, cfg.mamba_d_inner,
+                              cfg.mamba_d_state, cfg.mamba_d_conv, dtype=dtype)
+    if mixer == "rwkv":
+        return ssm.rwkv6_init(key, cfg.d_model, cfg.d_ff,
+                              cfg.rwkv_head_size, dtype=dtype)
+    raise ValueError(mixer)
+
+
+def _ffn_init(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    if kind == "moe":
+        return ffn_lib.moe_init(key, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                                cfg.num_shared_experts, dtype=dtype)
+    return ffn_lib.dense_ffn_init(key, cfg.d_model, cfg.d_ff, dtype=dtype)
+
+
+def _block_position_init(key, cfg: ModelConfig, mixer: str, fkind: str,
+                         dtype, cross: bool) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "norm1": nn.rmsnorm_init(cfg.d_model, dtype=dtype),
+        "mixer": _mixer_init(ks[0], cfg, mixer, dtype),
+    }
+    # RWKV folds its FFN (channel-mix) into the mixer params; others add one.
+    if mixer != "rwkv":
+        p["norm2"] = nn.rmsnorm_init(cfg.d_model, dtype=dtype)
+        p["ffn"] = _ffn_init(ks[1], cfg, fkind, dtype)
+    else:
+        p["norm2"] = nn.rmsnorm_init(cfg.d_model, dtype=dtype)
+    if cross:
+        p["norm_cross"] = nn.rmsnorm_init(cfg.d_model, dtype=dtype)
+        p["cross"] = _attn_init(ks[2], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = _dt(cfg)
+    keys = jax.random.split(key, 8)
+    program = cfg.block_program()
+    cross = cfg.encoder_layers > 0
+
+    def stack_init(k, mixer, fkind, cross_):
+        def one(kk):
+            return _block_position_init(kk, cfg, mixer, fkind, dtype, cross_)
+        return jax.vmap(one)(jax.random.split(k, cfg.num_blocks))
+
+    layers = {}
+    for pos, (mixer, fkind) in enumerate(program):
+        layers[f"pos{pos}"] = stack_init(
+            jax.random.fold_in(keys[0], pos), mixer, fkind, cross)
+
+    params: Params = {
+        "embed": nn.embedding_init(keys[1], cfg.vocab_size, cfg.d_model, dtype=dtype),
+        "layers": layers,
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.linear_init(keys[2], cfg.d_model, cfg.vocab_size,
+                                           dtype=dtype)
+    if cfg.encoder_layers:
+        def enc_one(kk):
+            return _block_position_init(kk, cfg, "attn", "dense", dtype, False)
+        params["enc_layers"] = jax.vmap(enc_one)(
+            jax.random.split(keys[3], cfg.encoder_layers))
+        params["enc_final_norm"] = nn.rmsnorm_init(cfg.d_model, dtype=dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """Shapes/dtypes only — used by the dry-run (no allocation)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ===========================================================================
+# Block forward (training / full-sequence)
+# ===========================================================================
+def _run_attn(p: Params, x, cfg: ModelConfig, positions, causal=True,
+              memory=None):
+    """memory: encoder output for cross-attention (keys/values source)."""
+    B, S, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if memory is None else memory
+    q = nn.linear(p["wq"], x).reshape(B, S, h, hd)
+    k = nn.linear(p["wk"], src).reshape(B, src.shape[1], hkv, hd)
+    v = nn.linear(p["wv"], src).reshape(B, src.shape[1], hkv, hd)
+    tp = max(ctx.axis_size("tp"), 1)
+    head_par = cfg.num_heads % tp == 0
+    use_seqpar = (not head_par and cfg.seqpar_attention and S % tp == 0
+                  and memory is None)
+    if head_par:
+        q = ctx.constrain(q, "dp", None, "tp", None)
+        k = ctx.constrain(k, "dp", None, "tp", None)
+        v = ctx.constrain(v, "dp", None, "tp", None)
+    elif not use_seqpar:
+        # baseline fallback for unsplittable head counts: shard head_dim
+        # (partial-sum attention; see flash_attention_seqpar for the fix)
+        q = ctx.constrain(q, "dp", None, None, "tp")
+        k = ctx.constrain(k, "dp", None, None, "tp")
+        v = ctx.constrain(v, "dp", None, None, "tp")
+    if memory is None:
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+        if use_seqpar:
+            # heads unsplittable (yi 56H, granite 24H): split the q rows
+            # over the model axis instead (sequence-parallel attention)
+            o = attn.flash_attention_seqpar(q, k, v, causal=causal)
+        else:
+            o = attn.flash_attention(q, k, v, causal=causal)
+    else:
+        # cross-attention: no rope, non-causal over memory
+        o = attn.flash_attention(q, k, v, causal=False)
+    return nn.linear(p["wo"], o.reshape(B, S, h * hd))
+
+
+def _run_ffn(p: Params, x, cfg: ModelConfig, kind: str):
+    if kind == "moe":
+        return ffn_lib.moe_ffn(
+            p, x, experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            router_aux_coef=cfg.router_aux_coef)
+    return ffn_lib.dense_ffn(p, x), jnp.zeros((), jnp.float32)
+
+
+def _position_forward(cfg: ModelConfig, p: Params, mixer: str, fkind: str,
+                      x, positions, memory=None, causal=True):
+    """One sub-layer position within a block.  Returns (x, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if mixer == "rwkv":
+        x = x + ssm.rwkv6_time_mix(
+            p["mixer"], nn.rmsnorm(p["norm1"], x, cfg.norm_eps),
+            head_size=cfg.rwkv_head_size)
+        x = x + ssm.rwkv6_channel_mix(
+            p["mixer"], nn.rmsnorm(p["norm2"], x, cfg.norm_eps))
+        return x, zero
+    if cfg.parallel_block and mixer == "attn":
+        hshared = nn.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        a = _run_attn(p["mixer"], hshared, cfg, positions, causal=causal)
+        f, aux = _run_ffn(p["ffn"], hshared, cfg, fkind)
+        return x + a + f, aux
+    h = nn.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        x = x + _run_attn(p["mixer"], h, cfg, positions, causal=causal)
+    else:  # mamba
+        x = x + ssm.mamba_forward(p["mixer"], h, d_state=cfg.mamba_d_state,
+                                  d_conv=cfg.mamba_d_conv,
+                                  fused=cfg.mamba_fused_discretization)
+    if "cross" in p and memory is not None:
+        hc = nn.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + _run_attn(p["cross"], hc, cfg, positions, memory=memory)
+    f, aux = _run_ffn(p["ffn"], nn.rmsnorm(p["norm2"], x, cfg.norm_eps),
+                      cfg, fkind)
+    return x + f, aux
+
+
+def _block_forward(cfg: ModelConfig, block_params: Params, x, positions,
+                   memory=None, causal=True):
+    """One block (cfg.block_period sub-layers).  Returns (x, aux_loss)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for pos, (mixer, fkind) in enumerate(cfg.block_program()):
+        x, aux = _position_forward(cfg, block_params[f"pos{pos}"], mixer,
+                                   fkind, x, positions, memory, causal)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def _scan_blocks(cfg: ModelConfig, layers: Params, x, positions,
+                 memory=None, causal=True):
+    block_fn = functools.partial(_block_forward, cfg, positions=positions,
+                                 memory=memory, causal=causal)
+
+    res_spec = ("dp", "tp", None) if cfg.seq_sharded_residual else \
+        ("dp", None, None)
+
+    def body(carry, block_params):
+        x, aux = carry
+        x = ctx.constrain(x, *res_spec)
+        fn = block_fn
+        if cfg.remat:
+            fn = jax.checkpoint(block_fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        x, aux_b = fn(block_params, x)
+        x = ctx.constrain(x, *res_spec)
+        return (x, aux + aux_b), None
+
+    if cfg.scan_blocks:
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), layers)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        nb = cfg.num_blocks
+        for b in range(nb):
+            blk = jax.tree.map(lambda a: a[b], layers)
+            (x, aux), _ = body((x, aux), blk)
+    return x, aux
+
+
+# ===========================================================================
+# Encoder (enc-dec family)
+# ===========================================================================
+def encode(cfg: ModelConfig, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: [B, S_src, d_model] — precomputed frontend embeddings (stub)."""
+    B, S, _ = frames.shape
+    positions = jnp.arange(S)[None, :]
+    x = frames.astype(_dt(cfg))
+
+    def layer_fwd(block_params, x):
+        # encoder layers are single (attn, dense) sub-layers; wrap as a
+        # period-1 block for _block_forward
+        h = nn.rmsnorm(block_params["norm1"], x, cfg.norm_eps)
+        x = x + _run_attn(block_params["mixer"], h, cfg, positions, causal=False)
+        f, _ = _run_ffn(block_params["ffn"],
+                        nn.rmsnorm(block_params["norm2"], x, cfg.norm_eps),
+                        cfg, "dense")
+        return x + f
+
+    def body(x, block_params):
+        fn = layer_fwd
+        if cfg.remat:
+            fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(block_params, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return nn.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+# ===========================================================================
+# Training loss
+# ===========================================================================
+def chunked_cross_entropy(x, table_T, targets, mask, chunk: int = 512):
+    """Per-token CE against a [d, V] head without materializing [B,S,V].
+
+    x: [B,S,d] final hidden; targets/mask: [B,S].  Scans over sequence
+    chunks; each chunk's logits are rematerialized in backward."""
+    B, S, d = x.shape
+    n = max(S // chunk, 1)
+    chunk = S // n
+
+    def chunk_loss(args):
+        xc, tc, mc = args
+        logits = (xc @ table_T).astype(jnp.float32)
+        logits = ctx.constrain(logits, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return ((lse - gold) * mc).sum(), mc.sum()
+
+    def body(carry, idx):
+        tot, cnt = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)
+        l, c = jax.checkpoint(chunk_loss)((sl(x), sl(targets), sl(mask)))
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _head_table_T(cfg: ModelConfig, params: Params):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Batch):
+    """Returns (x [B,S,d], targets [B,S], mask [B,S], positions [B,S])."""
+    tokens = batch["tokens"]
+    x = nn.embed(params["embed"], tokens)
+    B, S = tokens.shape
+    if cfg.frontend is not None and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(x.dtype)     # [B, P, d]
+        x = jnp.concatenate([fe, x], axis=1)
+        P = fe.shape[1]
+        pad = jnp.zeros((B, P), tokens.dtype)
+        targets = jnp.concatenate([pad, batch["targets"]], axis=1)
+        mask = jnp.concatenate([jnp.zeros((B, P), jnp.float32),
+                                batch.get("mask", jnp.ones((B, S), jnp.float32))],
+                               axis=1)
+    else:
+        targets = batch["targets"]
+        mask = batch.get("mask", jnp.ones((B, S), jnp.float32))
+    S_tot = x.shape[1]
+    positions = jnp.arange(S_tot)[None, :]
+    x = ctx.constrain(x, "dp", None, None)
+    return x, targets, mask, positions
+
+
+def train_loss(cfg: ModelConfig):
+    """Returns loss_fn(params, batch) -> (loss, metrics)."""
+
+    def loss_fn(params: Params, batch: Batch):
+        memory = None
+        if cfg.encoder_layers:
+            memory = encode(cfg, params, batch["frames"])
+        x, targets, mask, positions = _embed_inputs(cfg, params, batch)
+        x, aux = _scan_blocks(cfg, params["layers"], x, positions,
+                              memory=memory, causal=True)
+        if cfg.seq_sharded_residual:
+            # gather the (single) final activation for the vocab projection
+            x = ctx.constrain(x, "dp", None, None)
+        x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        ce = chunked_cross_entropy(x, _head_table_T(cfg, params), targets, mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+# ===========================================================================
+# Inference prefill: forward-only, emits the KV cache + last-token logits
+# ===========================================================================
+def prefill_forward(cfg: ModelConfig):
+    """Returns fn(params, batch) -> (last_logits [B,V], kv_outputs).
+
+    kv_outputs: per attention position, post-RoPE K/V for the whole prompt
+    (stacked [nb, B, S, hkv, hd]) — exactly what init_cache-shaped decode
+    consumes.  Recurrent positions (mamba/rwkv) expose their final states.
+    Forward-only: no loss, no remat-backward, O(carry) live memory."""
+
+    def fn(params: Params, batch: Batch):
+        memory = None
+        if cfg.encoder_layers:
+            memory = encode(cfg, params, batch["frames"])
+        x, _, _, positions = _embed_inputs(cfg, params, batch)
+        B, S, _ = x.shape
+        h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+        def body(x, block_params):
+            ys = {}
+            for pos, (mixer, _) in enumerate(cfg.block_program()):
+                p = block_params[f"pos{pos}"]
+                if mixer == "attn":
+                    # tap the post-RoPE K/V of this layer for the cache
+                    # output (re-projection: 2 of ~12 layer matmuls)
+                    hh = nn.rmsnorm(p["norm1"], x, cfg.norm_eps)
+                    k = nn.linear(p["mixer"]["wk"], hh).reshape(B, S, hkv, hd)
+                    v = nn.linear(p["mixer"]["wv"], hh).reshape(B, S, hkv, hd)
+                    k = nn.apply_rope(k, positions, cfg.rope_theta)
+                    ys[f"pos{pos}"] = {"k": k, "v": v}
+                # (the tap reads the same normed input position_forward
+                # will consume, so K/V match decode exactly)
+                x, _ = _position_forward(cfg, p, mixer, cfg.ffn_at(pos),
+                                         x, positions, memory)
+            return x, ys
+
+        x, kv = jax.lax.scan(body, x, params["layers"])
+        x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        last = x[:, -1]
+        logits = (last @ _head_table_T(cfg, params)).astype(jnp.float32)
+        return logits, kv
+
+    return fn
+
+
+# ===========================================================================
+# Serving: cache init + single-token decode step
+# ===========================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int = 0) -> dict:
+    """Decode-state pytree, stacked over blocks per position."""
+    dtype = _dt(cfg)
+    nb = cfg.num_blocks
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    cache: dict = {"len": jnp.zeros((), jnp.int32)}
+    for pos, (mixer, _) in enumerate(cfg.block_program()):
+        if mixer == "attn":
+            c = {"k": jnp.zeros((nb, batch, max_seq, hkv, hd), dtype),
+                 "v": jnp.zeros((nb, batch, max_seq, hkv, hd), dtype)}
+        elif mixer == "mamba":
+            c = {"h": jnp.zeros((nb, batch, cfg.mamba_d_inner, cfg.mamba_d_state),
+                                jnp.float32),
+                 "conv": jnp.zeros((nb, batch, cfg.mamba_d_conv - 1,
+                                    cfg.mamba_d_inner), dtype)}
+        else:  # rwkv
+            H = cfg.rwkv_heads
+            c = {"S": jnp.zeros((nb, batch, H, cfg.rwkv_head_size,
+                                 cfg.rwkv_head_size), jnp.float32),
+                 "x_tm": jnp.zeros((nb, batch, cfg.d_model), dtype),
+                 "x_cm": jnp.zeros((nb, batch, cfg.d_model), dtype)}
+        if cfg.encoder_layers:
+            c["ck"] = jnp.zeros((nb, batch, enc_len, hkv, hd), dtype)
+            c["cv"] = jnp.zeros((nb, batch, enc_len, hkv, hd), dtype)
+        cache[f"pos{pos}"] = c
+    return cache
+
+
+def _decode_attn(p: Params, x_t, cfg: ModelConfig, kc, vc, t):
+    """x_t: [B,1,d]; kc/vc: [B,Smax,hkv,hd]; t: scalar position."""
+    B = x_t.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos = jnp.full((B, 1), t, jnp.int32)
+    q = nn.apply_rope(nn.linear(p["wq"], x_t).reshape(B, 1, h, hd), pos, cfg.rope_theta)
+    k = nn.apply_rope(nn.linear(p["wk"], x_t).reshape(B, 1, hkv, hd), pos, cfg.rope_theta)
+    v = nn.linear(p["wv"], x_t).reshape(B, 1, hkv, hd)
+    kc, vc = attn.update_kv_cache(kc, vc, k, v, t)
+    o = attn.decode_attention(q, kc, vc, t + 1)
+    return nn.linear(p["wo"], o.reshape(B, 1, h * hd)), kc, vc
+
+
+def _decode_cross_attn(p: Params, x_t, cfg: ModelConfig, ck, cv, enc_len):
+    B = x_t.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = nn.linear(p["wq"], x_t).reshape(B, 1, h, hd)
+    o = attn.decode_attention(q, ck, cv, enc_len)
+    return nn.linear(p["wo"], o.reshape(B, 1, h * hd))
+
+
+def serve_step(cfg: ModelConfig):
+    """Returns step_fn(params, cache, tokens [B,1]) -> (logits [B,V], cache).
+
+    The enc-dec family reads precomputed cross-attention KV from the cache
+    (written by `prefill_encoder`)."""
+
+    def step_fn(params: Params, cache: dict, tokens: jnp.ndarray):
+        t = cache["len"]
+        x = nn.embed(params["embed"], tokens)          # [B,1,d]
+        new_cache: dict = {"len": t + 1}
+
+        def body(x, scan_in):
+            block_params, block_cache = scan_in
+            ys = {}
+            for pos, (mixer, fkind) in enumerate(cfg.block_program()):
+                p = block_params[f"pos{pos}"]
+                c = block_cache[f"pos{pos}"]
+                yc = dict(c)
+                if mixer == "rwkv":
+                    h = nn.rmsnorm(p["norm1"], x, cfg.norm_eps)
+                    y, tm_cache = ssm.rwkv6_time_mix_step(
+                        p["mixer"], h, {"S": c["S"], "x_tm": c["x_tm"],
+                                        "x_cm": c["x_cm"]},
+                        head_size=cfg.rwkv_head_size)
+                    x = x + y
+                    h2 = nn.rmsnorm(p["norm2"], x, cfg.norm_eps)
+                    y2, cm_cache = ssm.rwkv6_channel_mix_step(
+                        p["mixer"], h2, tm_cache)
+                    x = x + y2
+                    yc.update(S=cm_cache["S"], x_tm=cm_cache["x_tm"],
+                              x_cm=cm_cache["x_cm"])
+                    ys[f"pos{pos}"] = yc
+                    continue
+                h = nn.rmsnorm(p["norm1"], x, cfg.norm_eps)
+                if mixer == "attn":
+                    if cfg.parallel_block:
+                        a, kc, vc = _decode_attn(p["mixer"], h, cfg, c["k"], c["v"], t)
+                        f, _ = _run_ffn(p["ffn"], h, cfg, fkind)
+                        x = x + a + f
+                        yc.update(k=kc, v=vc)
+                        ys[f"pos{pos}"] = yc
+                        continue
+                    a, kc, vc = _decode_attn(p["mixer"], h, cfg, c["k"], c["v"], t)
+                    x = x + a
+                    yc.update(k=kc, v=vc)
+                else:  # mamba
+                    y, mcache = ssm.mamba_step(
+                        p["mixer"], h, {"h": c["h"], "conv": c["conv"]},
+                        d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv)
+                    x = x + y
+                    yc.update(h=mcache["h"], conv=mcache["conv"])
+                if "cross" in p and "ck" in c:
+                    hc = nn.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+                    x = x + _decode_cross_attn(p["cross"], hc, cfg,
+                                               c["ck"], c["cv"],
+                                               c["ck"].shape[1])
+                f, _ = _run_ffn(p["ffn"], nn.rmsnorm(p["norm2"], x, cfg.norm_eps),
+                                cfg, fkind)
+                x = x + f
+                ys[f"pos{pos}"] = yc
+            return x, ys
+
+        block_caches = {k: v for k, v in cache.items() if k.startswith("pos")}
+        x, new_block_caches = jax.lax.scan(
+            body, x, (params["layers"], block_caches))
+        new_cache.update(new_block_caches)
+        x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x[:, 0] @ _head_table_T(cfg, params)).astype(jnp.float32)
+        return logits, new_cache
+
+    return step_fn
+
+
+def prefill_encoder(cfg: ModelConfig, params: Params, cache: dict,
+                    frames: jnp.ndarray) -> dict:
+    """Run the encoder and write cross-attention KV into the cache."""
+    memory = encode(cfg, params, frames)
+    B, Se, _ = memory.shape
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def per_block(block_params):
+        out = {}
+        for pos in range(cfg.block_period):
+            p = block_params[f"pos{pos}"]
+            k = nn.linear(p["cross"]["wk"], memory).reshape(B, Se, hkv, hd)
+            v = nn.linear(p["cross"]["wv"], memory).reshape(B, Se, hkv, hd)
+            out[f"pos{pos}"] = (k, v)
+        return out
+
+    kv = jax.lax.map(per_block, params["layers"])
+    for pos in range(cfg.block_period):
+        k, v = kv[f"pos{pos}"]
+        cache[f"pos{pos}"] = dict(cache[f"pos{pos}"], ck=k, cv=v)
+    return cache

@@ -1,0 +1,103 @@
+"""Pure-JAX neural-net primitives (no flax): param-dict init + apply fns.
+
+Parameters are plain nested dicts of jnp arrays so they pytree-map cleanly
+onto sharding specs (sharding/policy.py matches on path names)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.bfloat16, scale: float | None = None) -> dict:
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits against the (possibly tied) embedding table."""
+    return x @ p["table"].T
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(x.dtype) * p["scale"]
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d, d_ff, dtype=dtype),
+        "up": linear_init(k2, d, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.sharding import ctx
+    h = linear(p["gate"], x)
+    u = linear(p["up"], x)
+    if h.ndim == 3:
+        # Megatron column-parallel: d_ff lives on the model axis — without
+        # this GSPMD replicates the FFN across tp (16× wasted FLOPs)
+        h = ctx.constrain(h, "dp", None, "tp")
+        u = ctx.constrain(u, "dp", None, "tp")
+    return linear(p["down"], jax.nn.silu(h) * u)
+
+
+# -- rotary position embeddings ----------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                   # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs    # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]                          # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,290 @@
+"""Recurrent mixers: Mamba-1 selective SSM (Jamba's backbone) and RWKV6
+"Finch" time-mix with data-dependent decay.
+
+Both use the same chunked-scan execution scheme: an outer ``lax.scan``
+carries the recurrent state across sequence chunks (so checkpointed
+activations are only chunk boundaries), and the inner chunk is processed
+step-by-step under ``jax.checkpoint`` (backward recomputes the chunk).
+This bounds live memory to O(state × S/chunk) instead of O(state × S),
+which is what makes the jamba/rwkv long_500k cells fit (DESIGN.md §5).
+
+Decode is a single-step state update — O(1) per token, the reason these
+families run the long_500k shape at all."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.sharding import ctx
+
+
+# ===========================================================================
+# Mamba-1 selective SSM
+# ===========================================================================
+def mamba_init(key, d: int, d_inner: int, d_state: int, d_conv: int,
+               dtype=jnp.bfloat16) -> dict:
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": nn.linear_init(ks[0], d, 2 * d_inner, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32)
+                   / jnp.sqrt(d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": nn.linear_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": nn.linear_init(ks[3], dt_rank, d_inner, bias=True, dtype=dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (d_inner, 1))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": nn.linear_init(ks[4], d_inner, d, dtype=dtype),
+    }
+
+
+def _mamba_scan_chunk(h0, dA, dBx, C):
+    """Sequential in-chunk recurrence.  h0:[B,di,ds], dA/dBx:[B,T,di,ds],
+    C:[B,T,ds] -> (hT, y:[B,T,di])."""
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+    hT, y = jax.lax.scan(step, h0,
+                         (dA.swapaxes(0, 1), dBx.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return hT, y.swapaxes(0, 1)
+
+
+def _mamba_scan_chunk_fused(h0, delta, Bm, C, x, A):
+    """In-chunk recurrence with per-step discretization (no [B,T,di,ds]
+    materialization).  delta/x: [B,T,di]; Bm/C: [B,T,ds]."""
+    def step(h, inp):
+        d_t, B_t, C_t, x_t = inp
+        dA_t = jnp.exp(d_t[..., None] * A)                # [B,di,ds]
+        h = dA_t * h + (d_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+    hT, y = jax.lax.scan(step, h0,
+                         (delta.swapaxes(0, 1), Bm.swapaxes(0, 1),
+                          C.swapaxes(0, 1), x.swapaxes(0, 1)))
+    return hT, y.swapaxes(0, 1)
+
+
+def mamba_forward(p: dict, u: jnp.ndarray, *, d_state: int, d_conv: int,
+                  chunk: int = 128, fused: bool = False) -> jnp.ndarray:
+    """Full-sequence training/prefill path.  u: [B, S, d]."""
+    B, S, d = u.shape
+    xz = nn.linear(p["in_proj"], u)
+    x, z = jnp.split(xz, 2, axis=-1)                       # [B,S,di]
+    x = ctx.constrain(x, "dp", None, "tp")
+    z = ctx.constrain(z, "dp", None, "tp")
+    di = x.shape[-1]
+
+    # causal depthwise conv1d
+    x_pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    x = sum(x_pad[:, i:i + S, :] * p["conv_w"][i] for i in range(d_conv))
+    x = jax.nn.silu(x + p["conv_b"])
+
+    dbc = nn.linear(p["x_proj"], x)
+    dt_rank = dbc.shape[-1] - 2 * d_state
+    dt, Bm, Cm = jnp.split(dbc, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(nn.linear(p["dt_proj"], dt).astype(jnp.float32))  # [B,S,di]
+    A = -jnp.exp(p["A_log"])                               # [di, ds]
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    n_chunks = max(S // chunk, 1)
+    chunk = S // n_chunks
+
+    def outer(h, idx):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)
+        d_c, B_c, C_c, x_c = sl(delta), sl(Bm), sl(Cm), sl(xf)
+
+        @jax.checkpoint
+        def run(h, d_c, B_c, C_c, x_c):
+            if fused:
+                return _mamba_scan_chunk_fused(h, d_c, B_c, C_c, x_c, A)
+            dA = jnp.exp(d_c[..., None] * A)               # [B,T,di,ds]
+            dBx = (d_c * x_c)[..., None] * B_c[:, :, None, :]
+            return _mamba_scan_chunk(h, dA, dBx, C_c)
+
+        h, y = run(h, d_c, B_c, C_c, x_c)
+        return h, y
+
+    h0 = jnp.zeros((B, di, d_state), jnp.float32)
+    _, ys = jax.lax.scan(outer, h0, jnp.arange(n_chunks))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y + xf * p["D"]
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    return nn.linear(p["out_proj"], y)
+
+
+def mamba_init_cache(cfg_B: int, d_inner: int, d_state: int, d_conv: int,
+                     dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((cfg_B, d_inner, d_state), jnp.float32),
+        "conv": jnp.zeros((cfg_B, d_conv - 1, d_inner), dtype),
+    }
+
+
+def mamba_step(p: dict, u_t: jnp.ndarray, cache: dict, *, d_state: int,
+               d_conv: int) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode.  u_t: [B, 1, d]."""
+    B = u_t.shape[0]
+    xz = nn.linear(p["in_proj"], u_t[:, 0])
+    x, z = jnp.split(xz, 2, axis=-1)                       # [B, di]
+    conv_buf = jnp.concatenate([cache["conv"], x[:, None]], axis=1)  # [B,dc,di]
+    x = jnp.einsum("bcd,cd->bd", conv_buf, p["conv_w"]) + p["conv_b"]
+    x = jax.nn.silu(x)
+    dbc = nn.linear(p["x_proj"], x)
+    dt_rank = dbc.shape[-1] - 2 * d_state
+    dt, Bm, Cm = jnp.split(dbc, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(nn.linear(p["dt_proj"], dt).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(delta[..., None] * A)                     # [B,di,ds]
+    dBx = (delta * x.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, None, :]
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cm.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["D"]
+    y = y.astype(u_t.dtype) * jax.nn.silu(z)
+    out = nn.linear(p["out_proj"], y)[:, None]
+    return out, {"h": h, "conv": conv_buf[:, 1:]}
+
+
+# ===========================================================================
+# RWKV6 (Finch): time-mix with data-dependent decay + channel-mix
+# ===========================================================================
+def rwkv6_init(key, d: int, d_ff: int, head_size: int, dtype=jnp.bfloat16) -> dict:
+    H = d // head_size
+    ks = jax.random.split(key, 12)
+    lora = max(d // 64, 32)
+    return {
+        # time-mix
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        "w_base": jnp.zeros((d,), jnp.float32) - 6.0,       # decay bias
+        "w_lora1": nn.linear_init(ks[1], d, lora, dtype=dtype),
+        "w_lora2": nn.linear_init(ks[2], lora, d, dtype=dtype, scale=0.01),
+        "Wr": nn.linear_init(ks[3], d, d, dtype=dtype),
+        "Wk": nn.linear_init(ks[4], d, d, dtype=dtype),
+        "Wv": nn.linear_init(ks[5], d, d, dtype=dtype),
+        "Wg": nn.linear_init(ks[6], d, d, dtype=dtype),
+        "u": jnp.zeros((H, head_size), jnp.float32),        # bonus
+        "Wo": nn.linear_init(ks[7], d, d, dtype=dtype),
+        "ln_x": nn.layernorm_init(d, dtype=dtype),          # per-head groupnorm
+        # channel-mix
+        "mu_ck": jax.random.uniform(ks[8], (d,), jnp.float32).astype(dtype),
+        "mu_cr": jax.random.uniform(ks[9], (d,), jnp.float32).astype(dtype),
+        "Wck": nn.linear_init(ks[10], d, d_ff, dtype=dtype),
+        "Wcv": nn.linear_init(ks[11], d_ff, d, dtype=dtype),
+        "Wcr": nn.linear_init(jax.random.fold_in(key, 99), d, d, dtype=dtype),
+    }
+
+
+def _rwkv_mix_projections(p, x, x_prev, head_size):
+    """Token-shift lerps + projections.  x/x_prev: [B,T,d]."""
+    B, T, d = x.shape
+    H = d // head_size
+    dx = x_prev - x
+    xw = x + dx * p["mu"][0]
+    xk = x + dx * p["mu"][1]
+    xv = x + dx * p["mu"][2]
+    xr = x + dx * p["mu"][3]
+    xg = x + dx * p["mu"][4]
+    # data-dependent decay (the Finch signature)
+    w_dd = nn.linear(p["w_lora2"], jnp.tanh(nn.linear(p["w_lora1"], xw)))
+    w = jnp.exp(-jnp.exp(p["w_base"] + w_dd.astype(jnp.float32)))   # [B,T,d] in (0,1)
+    r = nn.linear(p["Wr"], xr).reshape(B, T, H, head_size)
+    k = nn.linear(p["Wk"], xk).reshape(B, T, H, head_size)
+    v = nn.linear(p["Wv"], xv).reshape(B, T, H, head_size)
+    g = jax.nn.silu(nn.linear(p["Wg"], xg))
+    r = ctx.constrain(r, "dp", None, "tp", None)
+    k = ctx.constrain(k, "dp", None, "tp", None)
+    v = ctx.constrain(v, "dp", None, "tp", None)
+    return w.reshape(B, T, H, head_size), r, k, v, g
+
+
+def _wkv_chunk(S0, w, r, k, v, u):
+    """Sequential WKV recurrence over one chunk.
+    S0: [B,H,hd,hd]; w,r,k,v: [B,T,H,hd]; u: [H,hd] -> (S_T, out [B,T,H,hd])."""
+    def step(S, inp):
+        w_t, r_t, k_t, v_t = inp                           # [B,H,hd] each
+        kv = k_t[..., :, None] * v_t[..., None, :]         # [B,H,hd,hd]
+        out = jnp.einsum("bhij,bhi->bhj", S + u[None, :, :, None] * kv, r_t)
+        S = w_t[..., None] * S + kv
+        return S, out
+    seq = tuple(a.swapaxes(0, 1) for a in
+                (w.astype(jnp.float32), r.astype(jnp.float32),
+                 k.astype(jnp.float32), v.astype(jnp.float32)))
+    S_T, out = jax.lax.scan(step, S0, seq)
+    return S_T, out.swapaxes(0, 1)
+
+
+def rwkv6_time_mix(p: dict, x: jnp.ndarray, *, head_size: int,
+                   chunk: int = 128) -> jnp.ndarray:
+    """Full-sequence path.  x: [B, S, d]."""
+    B, S, d = x.shape
+    H = d // head_size
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    w, r, k, v, g = _rwkv_mix_projections(p, x, x_prev, head_size)
+
+    n_chunks = max(S // chunk, 1)
+    chunk = S // n_chunks
+
+    def outer(S0, idx):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, axis=1)
+
+        @jax.checkpoint
+        def run(S0, w_c, r_c, k_c, v_c):
+            return _wkv_chunk(S0, w_c, r_c, k_c, v_c, p["u"])
+
+        S_T, out = run(S0, sl(w), sl(r), sl(k), sl(v))
+        return S_T, out
+
+    S0 = jnp.zeros((B, H, head_size, head_size), jnp.float32)
+    _, outs = jax.lax.scan(outer, S0, jnp.arange(n_chunks))
+    out = outs.swapaxes(0, 1).reshape(B, S, d)
+    out = nn.layernorm(p["ln_x"], out.astype(x.dtype))
+    return nn.linear(p["Wo"], out * g)
+
+
+def rwkv6_channel_mix(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    dx = x_prev - x
+    xk = x + dx * p["mu_ck"]
+    xr = x + dx * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(nn.linear(p["Wck"], xk)))
+    k = ctx.constrain(k, "dp", None, "tp")    # column-parallel channel mix
+    return jax.nn.sigmoid(nn.linear(p["Wcr"], xr)) * nn.linear(p["Wcv"], k)
+
+
+def rwkv6_init_cache(B: int, d: int, head_size: int, dtype=jnp.float32) -> dict:
+    H = d // head_size
+    return {
+        "S": jnp.zeros((B, H, head_size, head_size), jnp.float32),
+        "x_tm": jnp.zeros((B, d), dtype),    # last token (time-mix shift)
+        "x_cm": jnp.zeros((B, d), dtype),    # last token (channel-mix shift)
+    }
+
+
+def rwkv6_time_mix_step(p: dict, x_t: jnp.ndarray, cache: dict, *,
+                        head_size: int) -> tuple[jnp.ndarray, dict]:
+    """x_t: [B, 1, d] single-token decode."""
+    B, _, d = x_t.shape
+    x_prev = cache["x_tm"][:, None]
+    w, r, k, v, g = _rwkv_mix_projections(p, x_t, x_prev, head_size)
+    S_T, out = _wkv_chunk(cache["S"], w, r, k, v, p["u"])
+    out = out.reshape(B, 1, d)
+    out = nn.layernorm(p["ln_x"], out.astype(x_t.dtype))
+    y = nn.linear(p["Wo"], out * g)
+    cache = dict(cache, S=S_T, x_tm=x_t[:, 0])
+    return y, cache
+
+
+def rwkv6_channel_mix_step(p: dict, x_t: jnp.ndarray, cache: dict) -> tuple[jnp.ndarray, dict]:
+    x_prev = cache["x_cm"][:, None]
+    dx = x_prev - x_t
+    xk = x_t + dx * p["mu_ck"]
+    xr = x_t + dx * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(nn.linear(p["Wck"], xk)))
+    y = jax.nn.sigmoid(nn.linear(p["Wcr"], xr)) * nn.linear(p["Wcv"], k)
+    return y, dict(cache, x_cm=x_t[:, 0])

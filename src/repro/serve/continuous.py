@@ -1,0 +1,110 @@
+"""Continuous batching: per-slot positions, admission, and eviction.
+
+Real serving at scale cannot wait for the whole batch to finish — slots
+are recycled as requests complete (vLLM-style iteration-level scheduling).
+This scheduler keeps a queue of pending requests and a fixed pool of
+batch slots; each engine step decodes one token for every active slot,
+retires slots that emit EOS or exhaust their budget, and immediately
+re-fills them with queued prompts (whose prefill proceeds in-slot,
+token-by-token, interleaved with other slots' decode — chunked-prefill
+semantics with chunk = 1)."""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serve.engine import SamplingParams, sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Host-side slot scheduler around a per-slot-position decode step."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int, n_slots: int,
+                 eos_id: int = 0, sp: SamplingParams = SamplingParams()):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.n_slots = n_slots
+        self.eos_id = eos_id
+        self.sp = sp
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)       # prompt cursor
+        self.cache = lm.init_cache(cfg, batch=n_slots, max_seq=max_seq)
+        self._step = jax.jit(lm.serve_step(cfg))
+        self._finished: list[Request] = []
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, key, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            key, k = jax.random.split(key)
+            self.step(k)
+            steps += 1
+        return self._finished
+
+    # -- one engine iteration ---------------------------------------------------
+    def step(self, key) -> None:
+        self._admit()
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            cur = self.slot_pos[i]
+            if cur < len(req.prompt):
+                tokens[i, 0] = req.prompt[cur]            # in-slot prefill
+            elif req.out:
+                tokens[i, 0] = req.out[-1]
+            else:
+                tokens[i, 0] = req.prompt[-1]
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens))
+        sampled = np.asarray(sample_token(key, logits, self.sp))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] < len(req.prompt):
+                continue                                   # still prefilling
+            tok = int(sampled[i])
+            req.out.append(tok)
+            if (tok == self.eos_id
+                    or len(req.out) >= req.max_new_tokens
+                    or int(self.slot_pos[i]) + len(req.out) >= self.max_seq):
+                req.done = True
+                self._finished.append(req)
+                self.slots[i] = None                       # recycle slot
+
+    # NOTE: the shared cache["len"] advances for all slots; per-slot state
+    # (attention over stale prefixes of retired slots) is masked out by the
+    # fresh prompt overwriting the slot's positions during in-slot prefill.
+    # A production engine would use paged caches; this models the schedule.
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self.slot_pos[i] = 0
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slots)

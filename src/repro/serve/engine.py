@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + decode with sampling.
+
+Static-batch engine over models/lm.serve_step (all slots advance in
+lockstep — the configuration the decode dry-run cells lower).  The
+continuous-batching engine with per-slot positions lives in
+serve/continuous.py."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => no top-k filter
+
+
+def sample_token(key, logits: jnp.ndarray, sp: SamplingParams) -> jnp.ndarray:
+    """logits: [B, V] -> [B] int32."""
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / sp.temperature
+    if sp.top_k > 0:
+        vals, _ = jax.lax.top_k(logits, sp.top_k)
+        cut = vals[:, -1:]
+        logits = jnp.where(logits < cut, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    """Minimal but complete: prompt prefill (token-by-token scan through
+    the same decode step — exact, cache-consistent for every family),
+    then batched autoregressive decode."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 batch_size: int, enc_len: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch_size = batch_size
+        self.enc_len = enc_len
+        self._step = jax.jit(lm.serve_step(cfg))
+
+    def new_cache(self):
+        return lm.init_cache(self.cfg, batch=self.batch_size,
+                             max_seq=self.max_seq, enc_len=self.enc_len)
+
+    def prefill(self, cache, prompt_tokens: jnp.ndarray):
+        """prompt_tokens: [B, T] — scan the decode step over the prompt."""
+        def body(cache, tok_col):
+            logits, cache = self._step(self.params, cache, tok_col[:, None])
+            return cache, logits
+
+        cache, logits = jax.lax.scan(body, cache, prompt_tokens.T)
+        return cache, logits[-1]                      # last-position logits
+
+    def generate(self, key, prompt_tokens: jnp.ndarray, max_new_tokens: int,
+                 sp: SamplingParams = SamplingParams(),
+                 frames: jnp.ndarray | None = None) -> jnp.ndarray:
+        """Returns [B, max_new_tokens] sampled continuations."""
+        cache = self.new_cache()
+        if self.cfg.encoder_layers and frames is not None:
+            cache = lm.prefill_encoder(self.cfg, self.params, cache, frames)
+        cache, logits = self.prefill(cache, prompt_tokens)
+
+        def body(carry, k):
+            cache, logits = carry
+            tok = sample_token(k, logits, sp)
+            logits, cache = self._step(self.params, cache, tok[:, None])
+            return (cache, logits), tok
+
+        keys = jax.random.split(key, max_new_tokens)
+        (_, _), toks = jax.lax.scan(body, (cache, logits), keys)
+        return toks.T                                  # [B, max_new]

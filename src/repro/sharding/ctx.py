@@ -1,0 +1,82 @@
+"""Activation-sharding context: mesh-aware with_sharding_constraint hooks.
+
+Model code calls ``constrain(x, "dp", None, "tp")`` at key activation
+boundaries; when a mesh context is active (set by the dry-run / trainer)
+this lowers to ``with_sharding_constraint`` with divisibility-checked
+axes, and when no context is set (CPU smoke tests) it is a no-op.  This
+keeps GSPMD's propagation on the intended Megatron-style layout instead
+of letting it invent per-d_model shardings (which caused involuntary
+full-rematerialization resharding in early dry-runs)."""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE: dict = {"mesh": None, "dp": (), "tp": "model"}
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    if mesh is None:
+        _STATE.update(mesh=None, dp=())
+        return
+    names = mesh.axis_names
+    _STATE.update(mesh=mesh,
+                  dp=tuple(n for n in names if n != "model"),
+                  tp="model" if "model" in names else None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = _STATE["mesh"]
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(prev)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def axis_size(which: str) -> int:
+    """Size of the 'dp'/'tp' axis group under the active mesh (1 if none)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return 1
+    axes = _STATE["dp"] if which == "dp" else _STATE["tp"]
+    if not axes:
+        return 1
+    return _axis_size(mesh, axes)
+
+
+def divides(dim: int, which: str) -> bool:
+    return dim % axis_size(which) == 0
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """axes: per-dim "dp" | "tp" | None.  Non-divisible dims are left
+    unsharded rather than erroring."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a is None:
+            spec.append(None)
+            continue
+        mesh_axes = _STATE["dp"] if a == "dp" else _STATE["tp"]
+        if mesh_axes and dim % _axis_size(mesh, mesh_axes) == 0:
+            spec.append(mesh_axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

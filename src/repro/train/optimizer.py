@@ -1,0 +1,126 @@
+"""Pure-JAX optimizers (no optax in the environment).
+
+Functional API mirroring optax: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  AdamW with decoupled weight decay, Adam, SGD+momentum,
+global-norm clipping, and warmup-cosine schedules — everything the LM
+trainer and the DRL agents need."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: jax.Array | dict
+    nu: jax.Array | dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, new_state)
+
+
+def _tree_zeros_like(tree, dtype=jnp.float32):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), tree)
+
+
+def adamw(
+    learning_rate: float | Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mask: Callable | None = None,   # pytree-of-bool fn for decay mask
+) -> Optimizer:
+    def lr_at(step):
+        return learning_rate(step) if callable(learning_rate) else learning_rate
+
+    def init(params):
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=_tree_zeros_like(params),
+            nu=_tree_zeros_like(params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr = lr_at(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+                          state.nu, grads)
+        decay_mask = mask(params) if mask is not None else jax.tree.map(
+            lambda p: p.ndim >= 2, params)
+
+        def upd(m, v, p, dm):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * jnp.where(dm, p.astype(u.dtype), 0.0)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params, decay_mask)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(learning_rate, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return adamw(learning_rate, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: jax.Array | dict
+
+
+def sgd(learning_rate, momentum: float = 0.0) -> Optimizer:
+    def lr_at(step):
+        return learning_rate(step) if callable(learning_rate) else learning_rate
+
+    def init(params):
+        return SGDState(jnp.zeros((), jnp.int32), _tree_zeros_like(params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                           state.momentum, grads)
+        updates = jax.tree.map(lambda m, p: (-lr_at(step) * m).astype(p.dtype),
+                               mom, params)
+        return updates, SGDState(step, mom)
+
+    return Optimizer(init=init, update=update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1) -> Callable:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)

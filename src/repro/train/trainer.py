@@ -1,0 +1,130 @@
+"""Training step: microbatched gradient accumulation + AdamW + options.
+
+``make_train_step`` builds the jit-able step used by both the real trainer
+(launch/train.py) and the multi-pod dry-run.  Structure:
+
+  batch [B_global, S]  ->  reshape [n_micro, B_micro, S]
+  lax.scan over microbatches: remat'd loss+grad, accumulated in bf16/fp32
+  (optional) int8 error-feedback compression of the cross-pod all-reduce
+  global-norm clip -> AdamW update (moments in cfg-selected dtype)
+
+Grad accumulation bounds activation memory (the scan carries only the grad
+buffer); XLA overlaps the per-microbatch collectives with the next
+microbatch's compute (latency hiding)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    micro_batches: int = 4
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"       # "bfloat16" halves optimizer memory
+    accum_dtype: str = "float32"
+    compress_grads: bool = False        # int8 EF all-reduce (train/compression)
+    b1: float = 0.9
+    b2: float = 0.95
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt: opt_lib.AdamState
+    # error-feedback residual for gradient compression (zeros if unused)
+    ef_residual: Any
+
+
+def make_optimizer(setup: TrainSetup):
+    sched = opt_lib.warmup_cosine(setup.learning_rate, setup.warmup_steps,
+                                  setup.total_steps)
+    return opt_lib.adamw(sched, b1=setup.b1, b2=setup.b2,
+                         weight_decay=setup.weight_decay)
+
+
+def init_train_state(cfg: ModelConfig, setup: TrainSetup, key) -> TrainState:
+    params = lm.init_params(cfg, key)
+    return _finish_init(params, setup)
+
+
+def _finish_init(params, setup: TrainSetup) -> TrainState:
+    optz = make_optimizer(setup)
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[setup.moment_dtype]
+    st = optz.init(params)
+    st = opt_lib.AdamState(
+        step=st.step,
+        mu=jax.tree.map(lambda m: m.astype(mdt), st.mu),
+        nu=jax.tree.map(lambda v: v.astype(mdt), st.nu),
+    )
+    if setup.compress_grads:
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    else:
+        ef = jax.tree.map(lambda p: jnp.zeros((), jnp.bfloat16), params)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=st, ef_residual=ef)
+
+
+def abstract_train_state(cfg: ModelConfig, setup: TrainSetup):
+    """Shape/dtype pytree of the full train state — no allocation."""
+    return jax.eval_shape(
+        lambda: _finish_init(lm.init_params(cfg, jax.random.PRNGKey(0)), setup))
+
+
+def make_train_step(cfg: ModelConfig, setup: TrainSetup) -> Callable:
+    loss_fn = lm.train_loss(cfg)
+    optz = make_optimizer(setup)
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[setup.accum_dtype]
+
+    def train_step(state: TrainState, batch: dict):
+        n_micro = setup.micro_batches
+
+        def reshape_micro(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+        micro = jax.tree.map(reshape_micro, batch)
+
+        def micro_step(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, mb)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(adt), g_acc, grads)
+            return (g_acc, loss_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), state.params)
+        (g_sum, loss_sum), _ = jax.lax.scan(
+            micro_step, (g0, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+        loss = loss_sum / n_micro
+
+        ef = state.ef_residual
+        if setup.compress_grads:
+            from repro.train.compression import ef_compress_grads
+            grads, ef = ef_compress_grads(grads, ef)
+
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, setup.clip_norm)
+        updates, opt_state = optz.update(grads, state.opt, state.params)
+        params = opt_lib.apply_updates(state.params, updates)
+        new_state = TrainState(step=state.step + 1, params=params,
+                               opt=opt_state, ef_residual=ef)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt_lib.warmup_cosine(
+                       setup.learning_rate, setup.warmup_steps,
+                       setup.total_steps)(state.step + 1)}
+        return new_state, metrics
+
+    return train_step

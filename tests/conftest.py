@@ -1,0 +1,8 @@
+import os
+import sys
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see the single real device (the 512-device flag
+# belongs to launch/dryrun.py only).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

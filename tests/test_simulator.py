@@ -1,0 +1,114 @@
+"""DSDPS queueing-simulator invariants (property-based where sensible)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dsdps import SchedulingEnv, apps
+from repro.dsdps.apps import default_workload
+from repro.dsdps.simulator import average_tuple_time_ms
+
+
+@pytest.fixture(scope="module")
+def env():
+    topo = apps.continuous_queries("small")
+    return SchedulingEnv(topo, default_workload(topo))
+
+
+def test_latency_positive_and_finite(env):
+    w = env.workload.init()
+    lat = env.evaluate(env.round_robin_assignment(), w)
+    assert 0.1 < float(lat) < 1e3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.5, 1.8))
+def test_latency_monotone_in_workload(factor):
+    topo = apps.continuous_queries("small")
+    env = SchedulingEnv(topo, default_workload(topo))
+    w = env.workload.init()
+    X = env.round_robin_assignment()
+    base = float(env.evaluate(X, w))
+    scaled = float(env.evaluate(X, w * factor))
+    if factor >= 1.0:
+        assert scaled >= base - 1e-6
+    else:
+        assert scaled <= base + 1e-6
+
+
+def test_straggler_increases_latency(env):
+    w = env.workload.init()
+    X = env.round_robin_assignment()
+    speed = jnp.asarray(env.cluster.speed_factors())
+    base = float(env.evaluate(X, w, speed=speed))
+    slow = float(env.evaluate(X, w, speed=speed.at[0].set(0.3)))
+    assert slow > base
+
+
+def test_default_multi_process_overhead(env):
+    """Storm's default (many worker processes/machine) must be slower than
+    the same machine assignment with one process per machine — the paper's
+    inter-process-traffic effect [52]."""
+    w = env.workload.init()
+    Xd, same_proc, n_procs = env.storm_default_assignment()
+    default = float(env.evaluate(Xd, w, same_proc=same_proc, n_procs=n_procs))
+    one_proc = float(env.evaluate(Xd, w))
+    assert default > one_proc
+
+
+def test_flow_conservation(env):
+    """Executor arrival rates solve λ = w + Rᵀλ."""
+    p = env.params
+    w = env.workload.init()
+    n = env.N
+    w_full = np.zeros(n)
+    w_full[p.spout_ids] = np.asarray(w)
+    lam = p.flow_solve @ w_full
+    np.testing.assert_allclose(lam, w_full + p.routing.T @ lam,
+                               rtol=1e-8, atol=1e-8)
+
+
+def test_reward_is_negative_latency(env):
+    key = jax.random.PRNGKey(0)
+    s = env.reset(key)
+    out = env.step(key, s, env.round_robin_assignment())
+    assert float(out.reward) == pytest.approx(-float(out.latency_ms))
+
+
+def test_step_counts_moved_executors(env):
+    key = jax.random.PRNGKey(0)
+    s = env.reset(key)
+    out = env.step(key, s, s.X)
+    assert int(out.moved) == 0
+    X2 = s.X.at[0].set(jnp.roll(s.X[0], 1))
+    out2 = env.step(key, s, X2)
+    assert int(out2.moved) == 1
+
+
+def test_noise_measurement_averages(env):
+    key = jax.random.PRNGKey(1)
+    w = env.workload.init()
+    X = env.round_robin_assignment()
+    exact = float(env.evaluate(X, w))
+    from repro.dsdps.simulator import measured_latency_ms
+    speed = jnp.asarray(env.cluster.speed_factors())
+    samples = [float(measured_latency_ms(jax.random.fold_in(key, i), X, w,
+                                         env.params, env.cluster, speed))
+               for i in range(30)]
+    assert abs(np.mean(samples) - exact) / exact < 0.05
+
+
+def test_all_paper_topologies_build():
+    for name, fn in apps.ALL_APPS.items():
+        topo = fn()
+        env = SchedulingEnv(topo, default_workload(topo))
+        w = env.workload.init()
+        lat = float(env.evaluate(env.round_robin_assignment(), w))
+        assert np.isfinite(lat) and lat > 0
+    # paper executor counts
+    assert apps.continuous_queries("small").num_executors == 20
+    assert apps.continuous_queries("medium").num_executors == 50
+    assert apps.continuous_queries("large").num_executors == 100
+    assert apps.log_stream_processing().num_executors == 100
+    assert apps.word_count().num_executors == 100
