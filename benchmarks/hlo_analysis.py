@@ -171,12 +171,24 @@ def _multipliers(comps: dict[str, Computation], entry: str) -> dict[str, float]:
     return mult
 
 
+_DOT_LHS_TYPE = re.compile(r"dot\(\s*([a-z0-9]+\[[0-9,]*\])")
+_DOT_LHS_NAME = re.compile(r"dot\(\s*%?([\w.\-]+)")
+
+
 def _dot_flops(op: Op, op_types: dict[str, str]) -> float:
-    """dot: flops = 2 * |result| * prod(lhs contracting dims)."""
-    m = re.search(r"dot\(\s*%?([\w.\-]+)", op.line)
-    if not m:
-        return 0.0
-    lhs = op_types.get(m.group(1), "")
+    """dot: flops = 2 * |result| * prod(lhs contracting dims).
+
+    Depending on the HLO dumper version, operands print with inline types —
+    ``dot(f32[128,128]{1,0} %lhs, ...)`` — or bare, with or without the
+    ``%`` sigil; prefer the inline type and fall back to a name lookup."""
+    tm = _DOT_LHS_TYPE.search(op.line)
+    if tm:
+        lhs = tm.group(1)
+    else:
+        nm = _DOT_LHS_NAME.search(op.line)
+        if not nm:
+            return 0.0
+        lhs = op_types.get(nm.group(1), "")
     lm = _SHAPE.search(lhs)
     if not lm:
         return 0.0

@@ -1,6 +1,11 @@
 """Shared harness for the paper's evaluation: run all four schedulers on a
 topology and report stabilized average tuple processing time (the
-quantity plotted in Figs 6/8/10)."""
+quantity plotted in Figs 6/8/10).
+
+DRL methods (DQN, actor-critic) run as a seed FLEET — ``budget.n_seeds``
+independent online-learning runs executed in one jitted, vmapped scan
+(core/agent.run_online_fleet) — and report mean ± std across seeds, the
+averaging discipline DRL-for-scheduling results need (Decima et al.)."""
 from __future__ import annotations
 
 import dataclasses
@@ -11,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DDPGConfig, DQNConfig, ModelBasedScheduler,
-                        ddpg_init, dqn_init, run_online_ddpg, run_online_dqn)
-from repro.core.ddpg import offline_pretrain
+                        run_online_fleet)
+from repro.core import ddpg as ddpg_lib
+from repro.core import dqn as dqn_lib
 from repro.core.exploration import EpsilonSchedule
 from repro.dsdps import SchedulingEnv, apps
 from repro.dsdps.apps import default_workload
@@ -28,6 +34,7 @@ class Budget:
     updates_per_epoch: int
     mb_samples: int
     k_nn: int = 12
+    n_seeds: int = 4          # fleet width of the DRL seed sweep
 
     @classmethod
     def quick(cls) -> "Budget":
@@ -38,7 +45,7 @@ class Budget:
     def paper(cls) -> "Budget":
         return cls(offline_samples=10_000, offline_updates=3000,
                    online_epochs=2000, updates_per_epoch=1, mb_samples=400,
-                   k_nn=16)
+                   k_nn=16, n_seeds=8)
 
     @classmethod
     def validated(cls) -> "Budget":
@@ -48,7 +55,7 @@ class Budget:
         this simulator."""
         return cls(offline_samples=4000, offline_updates=1500,
                    online_epochs=600, updates_per_epoch=2, mb_samples=400,
-                   k_nn=16)
+                   k_nn=16, n_seeds=8)
 
 
 def make_env(app: str) -> SchedulingEnv:
@@ -70,68 +77,102 @@ def run_model_based(env: SchedulingEnv, budget: Budget, seed: int = 0):
     return float(env.evaluate(X, w)), X
 
 
-def run_dqn(env: SchedulingEnv, budget: Budget, seed: int = 0):
+def run_dqn(env: SchedulingEnv, budget: Budget, seed: int = 0,
+            deploy: bool = True):
+    """Fleet of budget.n_seeds independent DQN runs in one XLA program.
+
+    Returns (per-seed deployed latencies, stacked History); ``deploy=False``
+    skips the per-seed greedy rollouts (callers that only need the reward
+    histories, e.g. paper_reward) and returns an empty latency list."""
     cfg = DQNConfig(n_executors=env.N, n_machines=env.M,
                     state_dim=env.state_dim,
                     eps=EpsilonSchedule(
                         decay_epochs=max(budget.online_epochs * 2 // 3, 1)))
-    state = dqn_init(jax.random.PRNGKey(seed), cfg)
-    state, hist = run_online_dqn(
-        jax.random.PRNGKey(seed + 1), env, cfg, state,
-        T=budget.online_epochs,
+    F = budget.n_seeds
+    states = dqn_lib.init_fleet(jax.random.PRNGKey(seed), cfg, F)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), F)
+    states, hist = run_online_fleet(
+        keys, env, cfg, states, T=budget.online_epochs,
         updates_per_epoch=budget.updates_per_epoch)
-    # the trained agent's deployed solution: greedy move rollout
-    from repro.core import dqn as dqn_lib
+    if not deploy:
+        return [], hist
+    # each trained agent's deployed solution: greedy move rollout
     w = env.workload.init()
-    s = env.reset(jax.random.PRNGKey(seed + 5))
-    for t in range(2 * env.N):
-        move = dqn_lib.select_move(jax.random.PRNGKey(t), state, cfg,
-                                   env.state_vector(s), explore=False)
-        s = s._replace(X=dqn_lib.apply_move(s.X, move, env.M))
-    lat = float(env.evaluate(s.X, w))
-    return lat, hist
+    lats = []
+    for f in range(F):
+        state_f = jax.tree.map(lambda x: x[f], states)
+        s = env.reset(jax.random.PRNGKey(seed + 5))
+        for t in range(2 * env.N):
+            move = dqn_lib.select_move(jax.random.PRNGKey(t), state_f, cfg,
+                                       env.state_vector(s), explore=False)
+            s = s._replace(X=dqn_lib.apply_move(s.X, move, env.M))
+        lats.append(float(env.evaluate(s.X, w)))
+    return lats, hist
 
 
-def run_actor_critic(env: SchedulingEnv, budget: Budget, seed: int = 0):
+def run_actor_critic(env: SchedulingEnv, budget: Budget, seed: int = 0,
+                     deploy: bool = True):
+    """Fleet of budget.n_seeds independent actor-critic runs (offline
+    pretrain + online learning, both fleet-batched).
+
+    Returns (per-seed deployed latencies, stacked History, (states, cfg));
+    ``deploy=False`` skips the per-seed wide-K-NN deployment search."""
     cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
                      state_dim=env.state_dim, k_nn=budget.k_nn,
                      eps=EpsilonSchedule(
                          decay_epochs=max(budget.online_epochs * 2 // 3, 1)))
-    state = ddpg_init(jax.random.PRNGKey(seed), cfg)
-    state = offline_pretrain(jax.random.PRNGKey(seed + 1), state, cfg, env,
-                             n_samples=budget.offline_samples,
-                             n_updates=budget.offline_updates)
-    state, hist = run_online_ddpg(
-        jax.random.PRNGKey(seed + 2), env, cfg, state,
-        T=budget.online_epochs,
-        updates_per_epoch=budget.updates_per_epoch)
-    # the trained agent's deployed solution (paper: "scheduling solutions
+    F = budget.n_seeds
+    states = ddpg_lib.init_fleet(jax.random.PRNGKey(seed), cfg, F)
+    states = ddpg_lib.offline_pretrain_fleet(
+        jax.random.split(jax.random.PRNGKey(seed + 1), F), states, cfg, env,
+        n_samples=budget.offline_samples, n_updates=budget.offline_updates)
+    states, hist = run_online_fleet(
+        jax.random.split(jax.random.PRNGKey(seed + 2), F), env, cfg, states,
+        T=budget.online_epochs, updates_per_epoch=budget.updates_per_epoch)
+    if not deploy:
+        return [], hist, (states, cfg)
+    # each trained agent's deployed solution (paper: "scheduling solutions
     # given by well-trained DRL agents"): greedy action with a wide exact
     # K-NN (K=256 is free with the closed-form enumeration), iterated a
     # few epochs as the system re-stabilizes
-    from repro.core import ddpg as ddpg_lib
     w = env.workload.init()
-    s = env.reset(jax.random.PRNGKey(seed + 5))
-    best = None
-    for t in range(4):
-        a = ddpg_lib.select_action(jax.random.PRNGKey(seed + 6 + t), state,
-                                   cfg, env.state_vector(s), explore=False,
-                                   exact_host_knn=True, k_override=256)
-        lat_a = float(env.evaluate(a, w))
-        if best is None or lat_a < best:
-            best = lat_a
-        s = s._replace(X=a)
-    return best, hist, (state, cfg)
+    lats = []
+    for f in range(F):
+        state_f = jax.tree.map(lambda x: x[f], states)
+        s = env.reset(jax.random.PRNGKey(seed + 5))
+        best = None
+        for t in range(4):
+            a = ddpg_lib.select_action(jax.random.PRNGKey(seed + 6 + t),
+                                       state_f, cfg, env.state_vector(s),
+                                       explore=False, exact_host_knn=True,
+                                       k_override=256)
+            lat_a = float(env.evaluate(a, w))
+            if best is None or lat_a < best:
+                best = lat_a
+            s = s._replace(X=a)
+        lats.append(best)
+    return lats, hist, (states, cfg)
 
 
 def compare_all(app: str, budget: Budget, seed: int = 0, verbose=True):
     env = make_env(app)
     t0 = time.time()
-    out: dict = {"app": app}
+    out: dict = {"app": app, "n_seeds": budget.n_seeds}
     out["default"] = run_default(env)
     out["model_based"], _ = run_model_based(env, budget, seed)
-    out["dqn"], dqn_hist = run_dqn(env, budget, seed)
-    out["actor_critic"], ac_hist, _ = run_actor_critic(env, budget, seed)
+    dqn_lats, dqn_hist = run_dqn(env, budget, seed)
+    ac_lats, ac_hist, _ = run_actor_critic(env, budget, seed)
+    out["dqn"] = float(np.mean(dqn_lats))
+    out["dqn_std"] = float(np.std(dqn_lats))
+    out["dqn_seeds"] = dqn_lats
+    out["actor_critic"] = float(np.mean(ac_lats))
+    out["actor_critic_std"] = float(np.std(ac_lats))
+    out["actor_critic_seeds"] = ac_lats
+    # seed-averaged online reward curves with variance bands (Figs 7/9/11)
+    for name, hist in (("dqn", dqn_hist), ("ac", ac_hist)):
+        mean, std = hist.seed_band()
+        out[f"{name}_curve_mean"] = np.round(mean, 5).tolist()
+        out[f"{name}_curve_std"] = np.round(std, 5).tolist()
     out["imp_vs_default"] = 1 - out["actor_critic"] / out["default"]
     out["imp_vs_model_based"] = 1 - out["actor_critic"] / out["model_based"]
     out["seconds"] = round(time.time() - t0, 1)
@@ -139,8 +180,11 @@ def compare_all(app: str, budget: Budget, seed: int = 0, verbose=True):
     out["_ac_hist"] = ac_hist
     if verbose:
         print(f"[{app}] default={out['default']:.2f}ms "
-              f"model={out['model_based']:.2f}ms dqn={out['dqn']:.2f}ms "
-              f"actor-critic={out['actor_critic']:.2f}ms "
+              f"model={out['model_based']:.2f}ms "
+              f"dqn={out['dqn']:.2f}±{out['dqn_std']:.2f}ms "
+              f"actor-critic={out['actor_critic']:.2f}"
+              f"±{out['actor_critic_std']:.2f}ms "
+              f"over {budget.n_seeds} seeds "
               f"(+{out['imp_vs_default']:.1%} vs default, "
               f"+{out['imp_vs_model_based']:.1%} vs model-based) "
               f"[{out['seconds']}s]", flush=True)

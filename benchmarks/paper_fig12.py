@@ -16,7 +16,7 @@ import numpy as np
 
 from benchmarks.paper_common import (Budget, make_env, run_actor_critic,
                                      run_model_based)
-from repro.core import run_online_ddpg
+from repro.core import run_online_fleet
 from repro.dsdps import SchedulingEnv
 from repro.dsdps.workload import WorkloadProcess
 
@@ -26,8 +26,8 @@ ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "paper"
 def run(app: str, budget: Budget, seed: int = 0,
         shift_factor: float = 1.5) -> dict:
     env = make_env(app)
-    # pre-train the agent on the unshifted workload
-    lat0, _, (state, cfg) = run_actor_critic(env, budget, seed)
+    # pre-train the agent fleet on the unshifted workload
+    ac_lats0, _, (states, cfg) = run_actor_critic(env, budget, seed)
     mb_lat0, Xmb = run_model_based(env, budget, seed)
 
     # shifted environment: both methods adapt
@@ -36,23 +36,30 @@ def run(app: str, budget: Budget, seed: int = 0,
                                               for r in env.workload.base_rates))
     env_shift = SchedulingEnv(env.topo, wl, cluster=env.cluster,
                               noise_sigma=env.noise_sigma, seed=env.seed)
-    # AC: continue online learning briefly under the new workload
-    state, hist = run_online_ddpg(
-        jax.random.PRNGKey(seed + 7), env_shift, cfg, state,
+    # AC: the whole seed fleet continues online learning briefly under the
+    # new workload — one batched scan
+    keys = jax.random.split(jax.random.PRNGKey(seed + 7), budget.n_seeds)
+    states, hist = run_online_fleet(
+        keys, env_shift, cfg, states,
         T=max(budget.online_epochs // 3, 40),
         updates_per_epoch=budget.updates_per_epoch)
     w_new = wl.init()
-    ac_after = float(env_shift.evaluate(jnp.asarray(hist.final_assignment),
-                                        w_new))
+    ac_after = [float(env_shift.evaluate(
+        jnp.asarray(hist.final_assignment[f]), w_new))
+        for f in range(budget.n_seeds)]
     # model-based: refit search under new workload using its old model
-    sched = __import__("repro.core.model_based",
-                       fromlist=["ModelBasedScheduler"])
     from repro.core.model_based import ModelBasedScheduler
     mb = ModelBasedScheduler(env_shift).fit(jax.random.PRNGKey(seed),
                                             n_samples=budget.mb_samples)
     mb_after = float(env_shift.evaluate(mb.schedule(w_new, sweeps=3), w_new))
-    return {"app": app, "ac_before": lat0, "mb_before": mb_lat0,
-            "ac_after_shift": ac_after, "mb_after_shift": mb_after,
+    return {"app": app, "n_seeds": budget.n_seeds,
+            "ac_before": float(np.mean(ac_lats0)),
+            "ac_before_std": float(np.std(ac_lats0)),
+            "mb_before": mb_lat0,
+            "ac_after_shift": float(np.mean(ac_after)),
+            "ac_after_shift_std": float(np.std(ac_after)),
+            "ac_after_seeds": ac_after,
+            "mb_after_shift": mb_after,
             "shift_factor": shift_factor}
 
 
@@ -68,7 +75,9 @@ def main() -> None:
     for app in args.apps:
         out = run(app, budget, args.seed)
         results.append(out)
-        print(f"[{app}] AC {out['ac_before']:.2f} -> {out['ac_after_shift']:.2f}ms, "
+        print(f"[{app}] AC {out['ac_before']:.2f}±{out['ac_before_std']:.2f} "
+              f"-> {out['ac_after_shift']:.2f}±{out['ac_after_shift_std']:.2f}ms "
+              f"({out['n_seeds']} seeds), "
               f"model-based {out['mb_before']:.2f} -> {out['mb_after_shift']:.2f}ms "
               f"after +{(out['shift_factor'] - 1):.0%} workload "
               f"(paper Fig12 cq_large: AC 1.76 vs MB 2.17)", flush=True)

@@ -1,6 +1,10 @@
 """Paper Fig 6: average tuple processing time on the continuous-queries
 topology, small/medium/large, × {default, model-based, DQN, actor-critic}.
 
+DRL entries are mean ± std over a fleet of budget.n_seeds independent
+seeds (one batched run), and fig6.json includes the seed-averaged online
+reward curves with variance bands (``{dqn,ac}_curve_mean/std``).
+
   python -m benchmarks.paper_fig6 [--paper-budget] [--seed N]
 """
 from __future__ import annotations

@@ -1,5 +1,6 @@
 """Paper Figs 8 & 10: log-stream-processing and word-count (large-scale),
-× the four schedulers.
+× the four schedulers.  DRL entries are mean ± std over a seed fleet (one
+batched run); fig8_10.json carries the seed-averaged reward curves.
 
   python -m benchmarks.paper_fig8_10 [--paper-budget]
 """

@@ -1,5 +1,6 @@
 """Paper Figs 7/9/11: normalized + smoothed reward over online learning
-for actor-critic vs DQN (large-scale topologies).
+for actor-critic vs DQN (large-scale topologies), seed-averaged over the
+fleet (mean curve ± std band across budget.n_seeds independent runs).
 
   python -m benchmarks.paper_reward --app cq_large [--epochs 400]
 """
@@ -18,19 +19,22 @@ ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "paper"
 
 def run(app: str, budget: Budget, seed: int = 0) -> dict:
     env = make_env(app)
-    _, dqn_hist = run_dqn(env, budget, seed)
-    _, ac_hist, _ = run_actor_critic(env, budget, seed)
+    _, dqn_hist = run_dqn(env, budget, seed, deploy=False)
+    _, ac_hist, _ = run_actor_critic(env, budget, seed, deploy=False)
+    dqn_mean, dqn_std = dqn_hist.seed_band()
+    ac_mean, ac_std = ac_hist.seed_band()
     out = {
         "app": app,
         "epochs": budget.online_epochs,
-        "dqn_norm_reward": dqn_hist.normalized_rewards().tolist(),
-        "dqn_smoothed": dqn_hist.smoothed_rewards().tolist(),
-        "ac_norm_reward": ac_hist.normalized_rewards().tolist(),
-        "ac_smoothed": ac_hist.smoothed_rewards().tolist(),
+        "n_seeds": budget.n_seeds,
+        "dqn_smoothed_mean": dqn_mean.tolist(),
+        "dqn_smoothed_std": dqn_std.tolist(),
+        "ac_smoothed_mean": ac_mean.tolist(),
+        "ac_smoothed_std": ac_std.tolist(),
     }
-    last = max(len(out["ac_smoothed"]) // 5, 1)
-    out["ac_final_avg"] = float(np.mean(out["ac_smoothed"][-last:]))
-    out["dqn_final_avg"] = float(np.mean(out["dqn_smoothed"][-last:]))
+    last = max(len(ac_mean) // 5, 1)
+    out["ac_final_avg"] = float(np.mean(ac_mean[-last:]))
+    out["dqn_final_avg"] = float(np.mean(dqn_mean[-last:]))
     return out
 
 

@@ -29,6 +29,12 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}", flush=True)
 
     if not args.skip_paper:
+        # minutes, not micro: trains a 32-lane fleet — skip on the fast path
+        from benchmarks.fleet_bench import run_all as fleet_run_all
+        for name, us, derived in fleet_run_all(fleet=32, epochs=300):
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+    if not args.skip_paper:
         from benchmarks.paper_common import Budget, compare_all
         budget = Budget.quick()
         for app, fig in [("cq_small", "fig6a"), ("cq_medium", "fig6b"),

@@ -2,7 +2,9 @@
 # distributed stream data processing (and its TPU instantiation).
 from repro.core.ddpg import DDPGConfig, DDPGState, init_state as ddpg_init
 from repro.core.dqn import DQNConfig, DQNState, init_state as dqn_init
-from repro.core.agent import History, run_online_ddpg, run_online_dqn
+from repro.core.agent import (History, run_online_ddpg, run_online_dqn,
+                              run_online_ddpg_python, run_online_dqn_python,
+                              run_online_fleet)
 from repro.core.knn_projection import (
     knn_actions_exact,
     knn_actions_jax,
@@ -17,7 +19,8 @@ from repro.core import spaces
 __all__ = [
     "DDPGConfig", "DDPGState", "ddpg_init",
     "DQNConfig", "DQNState", "dqn_init",
-    "History", "run_online_ddpg", "run_online_dqn",
+    "History", "run_online_ddpg", "run_online_dqn", "run_online_fleet",
+    "run_online_ddpg_python", "run_online_dqn_python",
     "knn_actions_exact", "knn_actions_jax", "knn_assignments_exact",
     "nearest_assignment", "ModelBasedScheduler",
     "ExpertPlacementEnv", "jamba_placement_env", "round_robin", "spaces",

@@ -4,7 +4,23 @@ These drive any environment exposing the SchedulingEnv surface
 (reset / step / state_vector / random_assignment) — the DSDPS simulator or
 the TPU expert-placement environment — with either the actor-critic method
 (Algorithm 1) or the DQN baseline, producing the reward traces of
-Figs 7/9/11."""
+Figs 7/9/11.
+
+Two execution paths:
+
+  * ``run_online_ddpg`` / ``run_online_dqn`` — ONE online run, executed as
+    a single jitted ``jax.lax.scan`` over decision epochs (the fused
+    epoch body lives in ddpg.make_epoch_step / dqn.make_epoch_step);
+
+  * ``run_online_fleet`` — MANY independent runs (seeds × workload traces
+    × straggler scenarios) executed as one XLA program: ``jax.vmap`` over
+    a fleet axis of the same scan.  This is what makes seed-swept reward
+    curves (mean ± band, Decima-style averaging) affordable: hundreds of
+    300-epoch runs amortize compilation and dispatch to a single call.
+
+The legacy per-epoch Python loops are kept as ``run_online_*_python`` —
+they are the bit-exactness reference for the scan runners
+(tests/test_fleet_runner.py) and the baseline of benchmarks/fleet_bench.py."""
 from __future__ import annotations
 
 import dataclasses
@@ -20,16 +36,34 @@ from repro.core.dqn import DQNConfig, DQNState
 
 @dataclasses.dataclass
 class History:
+    """Reward / latency / movement traces of one run ([T]) or of a fleet of
+    runs ([fleet, T]); final_assignment is [N, M] or [fleet, N, M]."""
+
     rewards: np.ndarray
     latencies: np.ndarray
     moved: np.ndarray
     final_assignment: np.ndarray
 
+    @property
+    def fleet(self) -> int | None:
+        """Fleet size, or None for a single-run history."""
+        return self.rewards.shape[0] if self.rewards.ndim == 2 else None
+
+    def lane(self, i: int) -> "History":
+        """The i-th run of a fleet history as a single-run History."""
+        if self.fleet is None:
+            raise ValueError("lane() on a single-run History")
+        return History(rewards=self.rewards[i], latencies=self.latencies[i],
+                       moved=self.moved[i],
+                       final_assignment=self.final_assignment[i])
+
     def normalized_rewards(self) -> np.ndarray:
-        """(r - r_min)/(r_max - r_min), the paper's normalization."""
+        """(r - r_min)/(r_max - r_min), the paper's normalization —
+        per-lane (along the epoch axis) for fleet histories."""
         r = self.rewards
-        lo, hi = r.min(), r.max()
-        return (r - lo) / max(hi - lo, 1e-12)
+        lo = r.min(axis=-1, keepdims=True)
+        hi = r.max(axis=-1, keepdims=True)
+        return (r - lo) / np.maximum(hi - lo, 1e-12)
 
     def smoothed_rewards(self, cutoff: float = 0.05) -> np.ndarray:
         """Forward-backward (zero-phase) low-pass filter, as in the paper
@@ -37,12 +71,146 @@ class History:
         from scipy.signal import butter, filtfilt
         b, a = butter(2, cutoff)
         r = self.normalized_rewards()
-        if len(r) < 15:
+        if r.shape[-1] < 15:
             return r
-        return filtfilt(b, a, r)
+        return filtfilt(b, a, r, axis=-1)
+
+    def seed_band(self, cutoff: float = 0.05) -> tuple[np.ndarray, np.ndarray]:
+        """(mean, std) across the fleet axis of the smoothed normalized
+        reward curves — the seed-averaged curve + variance band plotted by
+        the paper_fig benchmarks."""
+        r = np.atleast_2d(self.smoothed_rewards(cutoff))
+        return r.mean(axis=0), r.std(axis=0)
+
+
+# --------------------------------------------------------------------------
+# Compiled-runner cache.  SchedulingEnv is an unhashable dataclass (its
+# SimParams hold numpy arrays), so it can't be a jit static argument; each
+# runner closes over the env instead and is cached by identity.  A live
+# entry holds a strong reference to its env, so an id() can only be
+# recycled after the entry is evicted — and eviction removes the key, so a
+# recycled id can never produce a stale hit.  Bounded FIFO keeps long
+# multi-app sweeps from pinning every retired XLA executable forever.
+# --------------------------------------------------------------------------
+_RUNNER_CACHE: dict[tuple, tuple] = {}
+_RUNNER_CACHE_MAX = 16
+
+
+def _lane_fn(env, cfg, T: int, updates_per_epoch: int, explore: bool):
+    """One online run as a pure function (key, agent_state, env_state) ->
+    (agent_state, rewards[T], latencies[T], moved[T], final_X)."""
+    if isinstance(cfg, DDPGConfig):
+        epoch = ddpg.make_epoch_step(env, cfg, updates_per_epoch, explore)
+    elif isinstance(cfg, DQNConfig):
+        epoch = dqn.make_epoch_step(env, cfg, updates_per_epoch, explore)
+    else:
+        raise TypeError(f"unknown agent config {type(cfg).__name__}")
+
+    def lane(key, state, env_state):
+        (state, env_state, _), (rewards, lats, moved) = jax.lax.scan(
+            epoch, (state, env_state, key), None, length=T)
+        return state, rewards, lats, moved, env_state.X
+
+    return lane
+
+
+def _compiled_runner(env, cfg, T: int, updates_per_epoch: int, explore: bool,
+                     batched: bool):
+    cache_key = (id(env), cfg, int(T), int(updates_per_epoch), bool(explore),
+                 bool(batched))
+    hit = _RUNNER_CACHE.get(cache_key)
+    if hit is not None:
+        return hit[1]
+    lane = _lane_fn(env, cfg, T, updates_per_epoch, explore)
+    fn = jax.jit(jax.vmap(lane) if batched else lane)
+    while len(_RUNNER_CACHE) >= _RUNNER_CACHE_MAX:
+        _RUNNER_CACHE.pop(next(iter(_RUNNER_CACHE)))
+    _RUNNER_CACHE[cache_key] = (env, fn)
+    return fn
+
+
+def _run_single(key, env, cfg, state, T, updates_per_epoch, explore):
+    k_env, key = jax.random.split(key)
+    env_state = env.reset(k_env)
+    run = _compiled_runner(env, cfg, T, updates_per_epoch, explore,
+                           batched=False)
+    state, rewards, lats, moved, X = run(key, state, env_state)
+    return state, History(rewards=np.asarray(rewards),
+                          latencies=np.asarray(lats),
+                          moved=np.asarray(moved),
+                          final_assignment=np.asarray(X))
 
 
 def run_online_ddpg(
+    key: jax.Array,
+    env,
+    cfg: DDPGConfig,
+    state: DDPGState,
+    T: int,
+    updates_per_epoch: int = 1,
+    explore: bool = True,
+) -> tuple[DDPGState, History]:
+    """One online actor-critic run as a single jitted scan over epochs."""
+    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore)
+
+
+def run_online_dqn(
+    key: jax.Array,
+    env,
+    cfg: DQNConfig,
+    state: DQNState,
+    T: int,
+    updates_per_epoch: int = 1,
+    explore: bool = True,
+) -> tuple[DQNState, History]:
+    """One online DQN run as a single jitted scan over epochs."""
+    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore)
+
+
+def run_online_fleet(
+    keys: jax.Array,
+    env,
+    cfg,
+    states,
+    T: int,
+    updates_per_epoch: int = 1,
+    explore: bool = True,
+    env_states=None,
+):
+    """Fleet-batched online learning: one XLA program for [fleet] runs.
+
+    ``keys``   — stacked per-lane PRNG keys ([fleet] key array);
+    ``states`` — per-lane agent states stacked on a leading [fleet] axis
+                 (ddpg.init_fleet / dqn.init_fleet, optionally pretrained
+                 with ddpg.offline_pretrain_fleet);
+    ``env_states`` — optional stacked EnvState (SchedulingEnv.reset_fleet)
+                 for heterogeneous lanes: per-lane straggler speed factors,
+                 initial assignments, warm workload states.  When omitted,
+                 every lane resets the env exactly as the single-run API
+                 does (so fleet lane i bit-matches a run_online_* call with
+                 the same key and initial state).
+
+    Returns (stacked agent states, History with [fleet, T] traces)."""
+    keys = jnp.asarray(keys)
+    if env_states is None:
+        pairs = jax.vmap(jax.random.split)(keys)          # [F, 2] keys
+        k_env, keys = pairs[:, 0], pairs[:, 1]
+        env_states = jax.vmap(env.reset)(k_env)
+    run = _compiled_runner(env, cfg, T, updates_per_epoch, explore,
+                           batched=True)
+    states, rewards, lats, moved, X = run(keys, states, env_states)
+    return states, History(rewards=np.asarray(rewards),
+                           latencies=np.asarray(lats),
+                           moved=np.asarray(moved),
+                           final_assignment=np.asarray(X))
+
+
+# --------------------------------------------------------------------------
+# Legacy per-epoch Python loops — the reference semantics.  Kept unchanged
+# as (a) the regression oracle for the scan runners and (b) the sequential
+# baseline the fleet microbenchmark measures its speedup against.
+# --------------------------------------------------------------------------
+def run_online_ddpg_python(
     key: jax.Array,
     env,
     cfg: DDPGConfig,
@@ -79,7 +247,7 @@ def run_online_ddpg(
     )
 
 
-def run_online_dqn(
+def run_online_dqn_python(
     key: jax.Array,
     env,
     cfg: DQNConfig,

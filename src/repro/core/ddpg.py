@@ -195,6 +195,69 @@ def tick(state: DDPGState) -> DDPGState:
 
 
 # --------------------------------------------------------------------------
+# Fused online epoch: select → env.step → store → update×U → tick as ONE
+# scan body.  This is the building block of the fleet runner (core/agent.py):
+# a whole online-learning run is a single `jax.lax.scan` over epochs, and a
+# fleet of independent runs is `jax.vmap` of that scan.  The running
+# reward-standardization statistics (r_mean/r_var/r_count) live in DDPGState
+# and therefore ride the scan carry automatically.
+# --------------------------------------------------------------------------
+def make_epoch_step(env, cfg: DDPGConfig, updates_per_epoch: int = 1,
+                    explore: bool = True):
+    """Scan body over decision epochs.
+
+    carry = (DDPGState, EnvState, key); per-epoch output is
+    (reward, latency_ms, moved).  The key-splitting discipline matches the
+    legacy Python loop (agent.run_online_ddpg_python) exactly, so the scan
+    runner reproduces its trace — tested in tests/test_fleet_runner.py."""
+    def epoch_step(carry, _):
+        state, env_state, key = carry
+        key, k_act, k_step, k_upd = jax.random.split(key, 4)
+        s_vec = env.state_vector(env_state)
+        action = select_action(k_act, state, cfg, s_vec, explore=explore,
+                               exact_host_knn=False)
+        out = env.step(k_step, env_state, action)
+        s_next = env.state_vector(out.state)
+        state = store(state, s_vec, action.reshape(-1), out.reward, s_next,
+                      reward_scale=cfg.reward_scale)
+
+        def upd(st, k):
+            st, _ = update_step(k, st, cfg)
+            return st, None
+
+        state, _ = jax.lax.scan(
+            upd, state, jax.random.split(k_upd, updates_per_epoch))
+        state = tick(state)
+        return (state, out.state, key), (out.reward, out.latency_ms, out.moved)
+
+    return epoch_step
+
+
+def init_fleet(key: jax.Array, cfg: DDPGConfig, fleet: int) -> DDPGState:
+    """Independently-initialized per-lane states, stacked on a leading
+    [fleet] axis (the shape run_online_fleet expects)."""
+    return jax.vmap(lambda k: init_state(k, cfg))(jax.random.split(key, fleet))
+
+
+def offline_pretrain_fleet(
+    keys: jax.Array,
+    states: DDPGState,
+    cfg: DDPGConfig,
+    env,
+    n_samples: int = 10_000,
+    n_updates: int = 2_000,
+) -> DDPGState:
+    """vmap of offline_pretrain over stacked lanes: every lane collects its
+    own random-action transitions and pretrains its own nets, all in one
+    XLA program."""
+    return jax.vmap(
+        lambda k, s: offline_pretrain(k, s, cfg, env,
+                                      n_samples=n_samples,
+                                      n_updates=n_updates)
+    )(keys, states)
+
+
+# --------------------------------------------------------------------------
 # Offline training (line 4): fill buffer with random-action transitions,
 # then run gradient updates — paper: 10,000 samples per setup.
 # --------------------------------------------------------------------------

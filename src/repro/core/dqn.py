@@ -113,3 +113,39 @@ def store(state: DQNState, s, move, r, s_next,
 
 def tick(state: DQNState) -> DQNState:
     return state._replace(epoch=state.epoch + 1)
+
+
+# --------------------------------------------------------------------------
+# Fused online epoch as a scan body (mirrors ddpg.make_epoch_step) — the
+# DQN lane program of the fleet runner in core/agent.py.
+# --------------------------------------------------------------------------
+def make_epoch_step(env, cfg: DQNConfig, updates_per_epoch: int = 1,
+                    explore: bool = True):
+    """carry = (DQNState, EnvState, key); emits (reward, latency_ms, moved).
+    Key-splitting matches agent.run_online_dqn_python exactly."""
+    def epoch_step(carry, _):
+        state, env_state, key = carry
+        key, k_act, k_step, k_upd = jax.random.split(key, 4)
+        s_vec = env.state_vector(env_state)
+        move = select_move(k_act, state, cfg, s_vec, explore=explore)
+        action = apply_move(env_state.X, move, cfg.n_machines)
+        out = env.step(k_step, env_state, action)
+        s_next = env.state_vector(out.state)
+        state = store(state, s_vec, move, out.reward, s_next,
+                      reward_scale=cfg.reward_scale)
+
+        def upd(st, k):
+            st, _ = update_step(k, st, cfg)
+            return st, None
+
+        state, _ = jax.lax.scan(
+            upd, state, jax.random.split(k_upd, updates_per_epoch))
+        state = tick(state)
+        return (state, out.state, key), (out.reward, out.latency_ms, out.moved)
+
+    return epoch_step
+
+
+def init_fleet(key: jax.Array, cfg: DQNConfig, fleet: int) -> DQNState:
+    """Independently-initialized per-lane states stacked on [fleet]."""
+    return jax.vmap(lambda k: init_state(k, cfg))(jax.random.split(key, fleet))

@@ -55,11 +55,13 @@ class SchedulingEnv:
         idx = np.arange(self.N) % self.M
         return jnp.asarray(np.eye(self.M)[idx], dtype=jnp.float32)
 
-    def storm_default_assignment(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+    def storm_default_assignment(
+            self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Storm EvenScheduler: executors round-robin over slots ordered
         machine-major — machine i%M, worker process (i//M) % slots.  Returns
-        (X, same_proc mask); executors on one machine usually land in
-        *different* processes, paying ser/deser even when co-located."""
+        (X, same_proc mask, n_procs per machine); executors on one machine
+        usually land in *different* processes, paying ser/deser even when
+        co-located."""
         idx = np.arange(self.N) % self.M
         proc = (np.arange(self.N) // self.M) % self.cluster.slots_per_machine
         X = np.eye(self.M)[idx].astype(np.float32)
@@ -121,3 +123,14 @@ class SchedulingEnv:
 
     def with_straggler(self, s: EnvState, machine: int, factor: float) -> EnvState:
         return s._replace(speed=s.speed.at[machine].set(factor))
+
+    def reset_fleet(self, keys: jax.Array, X0: jnp.ndarray | None = None,
+                    speed_factors: jnp.ndarray | None = None) -> EnvState:
+        """Stacked initial states for ``run_online_fleet``: one EnvState per
+        lane ([F] leading axis).  ``speed_factors`` ([F, M]) builds a fleet
+        of straggler scenarios — per-lane machine slowdowns."""
+        states = jax.vmap(lambda k: self.reset(k, X0))(keys)
+        if speed_factors is not None:
+            states = states._replace(
+                speed=jnp.asarray(speed_factors, jnp.float32))
+        return states

@@ -23,6 +23,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
+from repro.treepath import keystr_path
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,7 +170,7 @@ class ShardingPolicy:
 
     def params_tree(self, abstract_params) -> Any:
         def spec_for(path, leaf):
-            pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+            pstr = keystr_path(path, separator="/")
             return self.param_spec(pstr, leaf.shape)
         return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
 
@@ -219,7 +220,7 @@ class ShardingPolicy:
 
     def cache_sharding(self, abstract_cache) -> Any:
         def spec(path, leaf):
-            pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+            pstr = keystr_path(path, separator="/")
             return NamedSharding(self.mesh, self.cache_spec(pstr, leaf.shape))
         return jax.tree_util.tree_map_with_path(spec, abstract_cache)
 

@@ -1,0 +1,30 @@
+"""Version-tolerant pytree key-path formatting.
+
+``jax.tree_util.keystr(path, simple=True, separator=...)`` only exists in
+newer jax releases; the pinned jax 0.4.37 accepts the path alone.  Every
+module that needs a name-based path string (sharding policy rules,
+checkpoint leaf ids) goes through :func:`keystr_path`, which produces the
+"simple" form (bare attribute / key / index names joined by ``separator``)
+on any jax version.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _key_token(key) -> str:
+    # GetAttrKey(name=...), DictKey(key=...), SequenceKey(idx=...),
+    # FlattenedIndexKey(key=...) — in the simple form each renders as its
+    # bare payload, no brackets/dots.
+    for attr in ("name", "key", "idx"):
+        if hasattr(key, attr):
+            return str(getattr(key, attr))
+    return str(key)
+
+
+def keystr_path(path, separator: str = "/") -> str:
+    """Simple-form key-path string, e.g. ``layers/pos0/ffn/gate/w``."""
+    try:
+        return jax.tree_util.keystr(path, simple=True, separator=separator)
+    except TypeError:  # jax <= 0.4.x: keystr(path) only
+        return separator.join(_key_token(k) for k in path)

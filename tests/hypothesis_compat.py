@@ -1,0 +1,33 @@
+"""Graceful degradation when the ``test`` extra isn't installed.
+
+``from hypothesis import given, ...`` at module top made four test modules
+uncollectable (a collection ERROR aborts the whole tier-1 run).  Importing
+the same names from this shim keeps the example-based tests in those
+modules running and turns each property-based test into a clean skip —
+``pytest.importorskip("hypothesis")`` semantics applied per-test rather
+than per-module."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    class _AnyStrategy:
+        """Stands in for ``strategies``: every attribute is a no-op factory
+        (the values are only consumed by ``@given``, which skips)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def _skipped():
+                pytest.importorskip("hypothesis")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.knn_topk import row_top2_regret, row_top2_regret_ref
