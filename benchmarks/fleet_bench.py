@@ -1,18 +1,27 @@
 """Fleet-runner microbenchmark: online-learning epochs/sec, sequential
-legacy Python loop vs the fully-jitted fleet-batched scan.
+legacy Python loop vs the fully-jitted fleet-batched scan — and, with
+``--scenario-batched``, the scenario-batched fleet where every lane carries
+its own EnvParams (heterogeneous workload rates × service jitter × noise ×
+stragglers) vmapped through the same one-XLA-program runner.
 
 The paper's credibility hinges on seed-swept online-learning curves; this
 bench shows why that is now affordable — one vmapped scan executes the
-whole seed fleet as a single XLA program (target: ≥ 10× lane-epochs/sec
-over the per-epoch Python loop).
+whole fleet as a single XLA program (target: ≥ 10× lane-epochs/sec over
+the per-epoch Python loop), and scenario heterogeneity rides as traced
+parameters: the stacked-params program compiles once, then any scenario
+edit (new rates, stragglers, noise levels) reuses the executable.
 
   PYTHONPATH=src python -m benchmarks.fleet_bench [--fleet 32] [--epochs 300]
+      [--scenario-batched] [--json artifacts/fleet_bench.json]
 
 Rows are ``name,us_per_call,derived`` — the benchmarks.run CSV schema
-(us_per_call = microseconds per lane-epoch)."""
+(us_per_call = microseconds per lane-epoch); the same rows are written to
+the JSON artifact."""
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -20,12 +29,16 @@ import jax
 from repro.core import ddpg as ddpg_lib
 from repro.core.agent import run_online_ddpg_python, run_online_fleet
 from repro.core.ddpg import DDPGConfig
-from repro.dsdps import SchedulingEnv, apps
+from repro.dsdps import SchedulingEnv, apps, scenarios
 from repro.dsdps.apps import default_workload
+
+DEFAULT_JSON = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / \
+    "fleet_bench.json"
 
 
 def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
-            baseline_epochs: int = 40) -> list[tuple]:
+            baseline_epochs: int = 40,
+            scenario_batched: bool = False) -> list[tuple]:
     topo = apps.ALL_APPS[app]()
     env = SchedulingEnv(topo, default_workload(topo))
     cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
@@ -44,7 +57,7 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
     rows.append((f"fleet_bench_{app}_python_loop", dt / baseline_epochs * 1e6,
                  f"epochs_per_sec={eps_python:.1f}"))
 
-    # fleet runner: fleet × epochs lane-epochs in ONE jitted vmapped scan
+    # seed-only fleet: fleet × epochs lane-epochs in ONE jitted vmapped scan
     states = ddpg_lib.init_fleet(jax.random.PRNGKey(2), cfg, fleet)
     keys = jax.random.split(jax.random.PRNGKey(3), fleet)
     t0 = time.perf_counter()
@@ -60,6 +73,29 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
                  f"lane_epochs_per_sec={eps_warm:.1f};"
                  f"speedup_vs_python={eps_warm / eps_python:.1f}x;"
                  f"speedup_incl_compile={eps_cold / eps_python:.1f}x"))
+
+    if scenario_batched:
+        # scenario-batched fleet: per-lane EnvParams (mixed stragglers /
+        # diurnal rates / noise / service jitter) vmapped as traced inputs.
+        # The stacked-params program compiles once (cold_s below); EDITING
+        # the scenario values afterwards reuses the executable — that warm
+        # path is what the second timing measures.
+        env_params = scenarios.build("mixed", env, fleet)
+        t0 = time.perf_counter()
+        run_online_fleet(keys, env, cfg, states, T=epochs,
+                         env_params=env_params)
+        dt_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_online_fleet(keys, env, cfg, states, T=epochs,
+                         env_params=env_params)
+        dt_warm = time.perf_counter() - t0
+        eps_scen = fleet * epochs / dt_warm
+        rows.append((f"fleet_bench_{app}_scenario_f{fleet}_T{epochs}",
+                     dt_warm / (fleet * epochs) * 1e6,
+                     f"lane_epochs_per_sec={eps_scen:.1f};"
+                     f"vs_seed_only_fleet={eps_scen / eps_warm:.2f}x;"
+                     f"speedup_vs_python={eps_scen / eps_python:.1f}x;"
+                     f"cold_s={dt_cold:.2f}"))
     return rows
 
 
@@ -68,10 +104,25 @@ def main() -> None:
     ap.add_argument("--fleet", type=int, default=32)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--app", default="cq_small")
+    ap.add_argument("--baseline-epochs", type=int, default=40)
+    ap.add_argument("--scenario-batched", action="store_true",
+                    help="also time the params-vmapped heterogeneous-"
+                         "scenario fleet (dsdps.scenarios 'mixed')")
+    ap.add_argument("--json", default=str(DEFAULT_JSON),
+                    help="benchmark JSON artifact path ('' disables)")
     args = ap.parse_args()
+    rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
+                   args.scenario_batched)
     print("name,us_per_call,derived")
-    for name, us, derived in run_all(args.fleet, args.epochs, args.app):
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
+    if args.json:
+        out = pathlib.Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(
+            [{"name": n, "us_per_call": round(us, 2), "derived": d}
+             for n, us, d in rows], indent=2))
+        print(f"wrote {out}")
 
 
 if __name__ == "__main__":

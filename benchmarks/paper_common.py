@@ -15,13 +15,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DDPGConfig, DQNConfig, ModelBasedScheduler,
-                        run_online_fleet)
+from repro.core import ModelBasedScheduler, make_agent, run_online_fleet
 from repro.core import ddpg as ddpg_lib
 from repro.core import dqn as dqn_lib
+from repro.core.api import params_are_stacked
 from repro.core.exploration import EpsilonSchedule
 from repro.dsdps import SchedulingEnv, apps
 from repro.dsdps.apps import default_workload
+
+
+def _lane_params(env, env_params, lane: int):
+    """The EnvParams lane ``lane`` deploys under: lane ``lane`` of a stacked
+    scenario fleet, the shared params otherwise (default when None)."""
+    p = env.default_params() if env_params is None else env_params
+    if params_are_stacked(env, p):
+        return jax.tree.map(lambda x: x[lane], p)
+    return p
 
 
 @dataclasses.dataclass
@@ -78,75 +87,81 @@ def run_model_based(env: SchedulingEnv, budget: Budget, seed: int = 0):
 
 
 def run_dqn(env: SchedulingEnv, budget: Budget, seed: int = 0,
-            deploy: bool = True):
+            deploy: bool = True, env_params=None):
     """Fleet of budget.n_seeds independent DQN runs in one XLA program.
 
     Returns (per-seed deployed latencies, stacked History); ``deploy=False``
     skips the per-seed greedy rollouts (callers that only need the reward
     histories, e.g. paper_reward) and returns an empty latency list."""
-    cfg = DQNConfig(n_executors=env.N, n_machines=env.M,
-                    state_dim=env.state_dim,
-                    eps=EpsilonSchedule(
-                        decay_epochs=max(budget.online_epochs * 2 // 3, 1)))
+    agent = make_agent("dqn", env,
+                       eps=EpsilonSchedule(
+                           decay_epochs=max(budget.online_epochs * 2 // 3, 1)))
+    cfg = agent.cfg
     F = budget.n_seeds
-    states = dqn_lib.init_fleet(jax.random.PRNGKey(seed), cfg, F)
+    states = agent.init_fleet(jax.random.PRNGKey(seed), F)
     keys = jax.random.split(jax.random.PRNGKey(seed + 1), F)
     states, hist = run_online_fleet(
-        keys, env, cfg, states, T=budget.online_epochs,
-        updates_per_epoch=budget.updates_per_epoch)
+        keys, env, agent, states, T=budget.online_epochs,
+        updates_per_epoch=budget.updates_per_epoch, env_params=env_params)
     if not deploy:
         return [], hist
-    # each trained agent's deployed solution: greedy move rollout
-    w = env.workload.init()
+    # each trained agent's deployed solution: greedy move rollout, scored
+    # under the scenario params that lane actually trained on
     lats = []
     for f in range(F):
+        p_f = _lane_params(env, env_params, f)
         state_f = jax.tree.map(lambda x: x[f], states)
-        s = env.reset(jax.random.PRNGKey(seed + 5))
+        s = env.reset(jax.random.PRNGKey(seed + 5), p_f)
         for t in range(2 * env.N):
             move = dqn_lib.select_move(jax.random.PRNGKey(t), state_f, cfg,
-                                       env.state_vector(s), explore=False)
+                                       env.state_vector(s, p_f),
+                                       explore=False)
             s = s._replace(X=dqn_lib.apply_move(s.X, move, env.M))
-        lats.append(float(env.evaluate(s.X, w)))
+        lats.append(float(env.evaluate(s.X, p_f.base_rates, params=p_f)))
     return lats, hist
 
 
 def run_actor_critic(env: SchedulingEnv, budget: Budget, seed: int = 0,
-                     deploy: bool = True):
+                     deploy: bool = True, env_params=None):
     """Fleet of budget.n_seeds independent actor-critic runs (offline
     pretrain + online learning, both fleet-batched).
 
     Returns (per-seed deployed latencies, stacked History, (states, cfg));
     ``deploy=False`` skips the per-seed wide-K-NN deployment search."""
-    cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
-                     state_dim=env.state_dim, k_nn=budget.k_nn,
-                     eps=EpsilonSchedule(
-                         decay_epochs=max(budget.online_epochs * 2 // 3, 1)))
+    agent = make_agent("ddpg", env, k_nn=budget.k_nn,
+                       eps=EpsilonSchedule(
+                           decay_epochs=max(budget.online_epochs * 2 // 3, 1)))
+    cfg = agent.cfg
     F = budget.n_seeds
-    states = ddpg_lib.init_fleet(jax.random.PRNGKey(seed), cfg, F)
+    states = agent.init_fleet(jax.random.PRNGKey(seed), F)
     states = ddpg_lib.offline_pretrain_fleet(
         jax.random.split(jax.random.PRNGKey(seed + 1), F), states, cfg, env,
-        n_samples=budget.offline_samples, n_updates=budget.offline_updates)
+        n_samples=budget.offline_samples, n_updates=budget.offline_updates,
+        env_params=env_params)
     states, hist = run_online_fleet(
-        jax.random.split(jax.random.PRNGKey(seed + 2), F), env, cfg, states,
-        T=budget.online_epochs, updates_per_epoch=budget.updates_per_epoch)
+        jax.random.split(jax.random.PRNGKey(seed + 2), F), env, agent, states,
+        T=budget.online_epochs, updates_per_epoch=budget.updates_per_epoch,
+        env_params=env_params)
     if not deploy:
         return [], hist, (states, cfg)
     # each trained agent's deployed solution (paper: "scheduling solutions
     # given by well-trained DRL agents"): greedy action with a wide exact
     # K-NN (K=256 is free with the closed-form enumeration), iterated a
-    # few epochs as the system re-stabilizes
-    w = env.workload.init()
+    # few epochs as the system re-stabilizes — under the lane's scenario
     lats = []
     for f in range(F):
+        p_f = _lane_params(env, env_params, f)
+        w = p_f.base_rates
         state_f = jax.tree.map(lambda x: x[f], states)
-        s = env.reset(jax.random.PRNGKey(seed + 5))
+        s = env.reset(jax.random.PRNGKey(seed + 5), p_f)
         best = None
         for t in range(4):
             a = ddpg_lib.select_action(jax.random.PRNGKey(seed + 6 + t),
-                                       state_f, cfg, env.state_vector(s),
+                                       state_f, cfg,
+                                       env.state_vector(s, p_f),
                                        explore=False, exact_host_knn=True,
                                        k_override=256)
-            lat_a = float(env.evaluate(a, w))
+            lat_a = float(env.evaluate(a, w, params=p_f))
             if best is None or lat_a < best:
                 best = lat_a
             s = s._replace(X=a)

@@ -9,7 +9,7 @@ Storm's default round-robin scheduler.
 import jax
 import jax.numpy as jnp
 
-from repro.core import DDPGConfig, ddpg_init, run_online_ddpg
+from repro.core import make_agent, run_online_agent
 from repro.core.ddpg import offline_pretrain
 from repro.core.exploration import EpsilonSchedule
 from repro.dsdps import SchedulingEnv, apps
@@ -21,19 +21,20 @@ def main() -> None:
     print(topo.describe(), "\n")
     env = SchedulingEnv(topo, default_workload(topo))
 
-    cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
-                     state_dim=env.state_dim, k_nn=8,
-                     eps=EpsilonSchedule(decay_epochs=120))
+    # any registered policy plugs into the same control loop:
+    # "ddpg" (Algorithm 1), "dqn", "round_robin", "model_based"
+    agent = make_agent("ddpg", env, k_nn=8,
+                       eps=EpsilonSchedule(decay_epochs=120))
     key = jax.random.PRNGKey(0)
-    agent = ddpg_init(key, cfg)
+    state = agent.init(key)
 
     print("offline pretraining on random-action transitions ...")
-    agent = offline_pretrain(jax.random.fold_in(key, 1), agent, cfg, env,
-                             n_samples=800, n_updates=300)
+    state = offline_pretrain(jax.random.fold_in(key, 1), state, agent.cfg,
+                             env, n_samples=800, n_updates=300)
 
     print("online learning (180 decision epochs) ...")
-    agent, hist = run_online_ddpg(jax.random.fold_in(key, 2), env, cfg,
-                                  agent, T=180, updates_per_epoch=2)
+    state, hist = run_online_agent(jax.random.fold_in(key, 2), env, agent,
+                                   state, T=180, updates_per_epoch=2)
 
     w = env.workload.init()
     Xd, mask, nproc = env.storm_default_assignment()

@@ -1,0 +1,69 @@
+"""Scenario fleets: heterogeneous operating regimes in ONE XLA program.
+
+The functional core API makes the environment's numeric parameters a
+vmappable EnvParams pytree, so a fleet of online-learning runs can differ
+not just by seed but by SCENARIO — per-lane workload rates, service-time
+jitter, telemetry noise, and straggler machines — while still executing as
+a single jitted, vmapped scan.  This script trains an actor-critic fleet
+over the "mixed" scenario distribution and reports per-lane results, then
+re-runs the same compiled program under a +50% global rate shift (a traced
+parameter change: zero recompilation).
+
+  PYTHONPATH=src python examples/scenario_fleet.py [--fleet 8] [--epochs 150]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_agent, run_online_fleet
+from repro.dsdps import SchedulingEnv, apps, scale_rates, scenarios
+from repro.dsdps.apps import default_workload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fleet", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=150)
+    ap.add_argument("--scenario", default="mixed",
+                    choices=list(scenarios.SCENARIOS))
+    args = ap.parse_args()
+
+    topo = apps.continuous_queries("small")
+    env = SchedulingEnv(topo, default_workload(topo))
+    agent = make_agent("ddpg", env, k_nn=8)
+
+    params = scenarios.build(args.scenario, env, args.fleet)
+    states = agent.init_fleet(jax.random.PRNGKey(0), args.fleet)
+    keys = jax.random.split(jax.random.PRNGKey(1), args.fleet)
+
+    print(f"training {args.fleet} heterogeneous '{args.scenario}' lanes x "
+          f"{args.epochs} epochs as one program ...")
+    t0 = time.perf_counter()
+    states, hist = run_online_fleet(keys, env, agent, states, T=args.epochs,
+                                    env_params=params)
+    dt = time.perf_counter() - t0
+    print(f"  {args.fleet * args.epochs} lane-epochs in {dt:.1f}s "
+          f"(incl. compile)\n")
+    print("lane  mean-latency(ms)  final-latency(ms)")
+    for f in range(args.fleet):
+        lane_p = jax.tree.map(lambda x: x[f], params)
+        final = float(env.evaluate(jnp.asarray(hist.final_assignment[f]),
+                                   lane_p.base_rates, params=lane_p))
+        print(f"  {f:2d}  {hist.latencies[f].mean():16.3f}  {final:17.3f}")
+
+    # a workload shift is just a parameter edit — same executable, no
+    # recompile: the warm re-run timing shows it
+    shifted = scale_rates(params, 1.5)
+    t0 = time.perf_counter()
+    _, hist2 = run_online_fleet(keys, env, agent, states, T=args.epochs,
+                                env_params=shifted)
+    dt2 = time.perf_counter() - t0
+    print(f"\n+50% rate shift re-run: {dt2:.1f}s (no recompilation) — "
+          f"mean latency {hist.latencies.mean():.2f} -> "
+          f"{hist2.latencies.mean():.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,11 @@
 # The paper's primary contribution: DRL-based model-free control for
 # distributed stream data processing (and its TPU instantiation).
+from repro.core.api import (Agent, agent_names, make_agent,
+                            make_epoch_step, register_agent)
 from repro.core.ddpg import DDPGConfig, DDPGState, init_state as ddpg_init
 from repro.core.dqn import DQNConfig, DQNState, init_state as dqn_init
-from repro.core.agent import (History, run_online_ddpg, run_online_dqn,
+from repro.core.agent import (History, as_agent, run_online_agent,
+                              run_online_ddpg, run_online_dqn,
                               run_online_ddpg_python, run_online_dqn_python,
                               run_online_fleet)
 from repro.core.knn_projection import (
@@ -12,16 +15,20 @@ from repro.core.knn_projection import (
     nearest_assignment,
 )
 from repro.core.model_based import ModelBasedScheduler
-from repro.core.placement import ExpertPlacementEnv, jamba_placement_env
+from repro.core.placement import (ExpertPlacementEnv, PlacementParams,
+                                  jamba_placement_env)
 from repro.core.round_robin import round_robin
 from repro.core import spaces
 
 __all__ = [
+    "Agent", "agent_names", "make_agent", "make_epoch_step", "register_agent",
     "DDPGConfig", "DDPGState", "ddpg_init",
     "DQNConfig", "DQNState", "dqn_init",
-    "History", "run_online_ddpg", "run_online_dqn", "run_online_fleet",
+    "History", "as_agent", "run_online_agent",
+    "run_online_ddpg", "run_online_dqn", "run_online_fleet",
     "run_online_ddpg_python", "run_online_dqn_python",
     "knn_actions_exact", "knn_actions_jax", "knn_assignments_exact",
     "nearest_assignment", "ModelBasedScheduler",
-    "ExpertPlacementEnv", "jamba_placement_env", "round_robin", "spaces",
+    "ExpertPlacementEnv", "PlacementParams", "jamba_placement_env",
+    "round_robin", "spaces",
 ]

@@ -1,22 +1,31 @@
 """Unified online-learning control loops (the paper's decision-epoch loop).
 
-These drive any environment exposing the SchedulingEnv surface
-(reset / step / state_vector / random_assignment) — the DSDPS simulator or
-the TPU expert-placement environment — with either the actor-critic method
-(Algorithm 1) or the DQN baseline, producing the reward traces of
-Figs 7/9/11.
+These drive any environment exposing the functional core surface
+(``reset(key, params)`` / ``step(key, state, action, params)`` /
+``state_vector(state, params)`` / ``default_params()``) — the DSDPS
+simulator or the TPU expert-placement environment — with any
+:class:`repro.core.api.Agent` (actor-critic Algorithm 1, the DQN baseline,
+or the non-learning round-robin / model-based baselines), producing the
+reward traces of Figs 7/9/11.
 
-Two execution paths:
+Three execution paths:
 
   * ``run_online_ddpg`` / ``run_online_dqn`` — ONE online run, executed as
-    a single jitted ``jax.lax.scan`` over decision epochs (the fused
-    epoch body lives in ddpg.make_epoch_step / dqn.make_epoch_step);
+    a single jitted ``jax.lax.scan`` over decision epochs (thin
+    compatibility wrappers over the Agent path);
 
-  * ``run_online_fleet`` — MANY independent runs (seeds × workload traces
-    × straggler scenarios) executed as one XLA program: ``jax.vmap`` over
-    a fleet axis of the same scan.  This is what makes seed-swept reward
-    curves (mean ± band, Decima-style averaging) affordable: hundreds of
-    300-epoch runs amortize compilation and dispatch to a single call.
+  * ``run_online_fleet`` — MANY independent runs executed as one XLA
+    program: ``jax.vmap`` over a fleet axis of the same scan.  Lanes may
+    differ by seed, by initial EnvState, AND by scenario: pass stacked
+    :class:`~repro.dsdps.simulator.EnvParams` (repro.dsdps.scenarios) and
+    heterogeneous workload rates × service-time jitter × noise levels ×
+    stragglers train in ONE program.  This is what makes Decima-style
+    train-over-a-distribution-of-workloads affordable here.
+
+Executable caching is jit's own: the env spec and the Agent bundle are
+hashable static arguments of module-level jitted programs, and EnvParams
+are traced, so re-running with new scenario parameters never recompiles.
+(The pre-v1 ``id(env)``-keyed ``_RUNNER_CACHE`` is gone.)
 
 The legacy per-epoch Python loops are kept as ``run_online_*_python`` —
 they are the bit-exactness reference for the scan runners
@@ -24,12 +33,14 @@ they are the bit-exactness reference for the scan runners
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ddpg, dqn
+from repro.core.api import Agent, make_epoch_step, params_are_stacked
 from repro.core.ddpg import DDPGConfig, DDPGState
 from repro.core.dqn import DQNConfig, DQNState
 
@@ -67,12 +78,16 @@ class History:
 
     def smoothed_rewards(self, cutoff: float = 0.05) -> np.ndarray:
         """Forward-backward (zero-phase) low-pass filter, as in the paper
-        ([20] Gustafsson filtfilt)."""
-        from scipy.signal import butter, filtfilt
-        b, a = butter(2, cutoff)
+        ([20] Gustafsson filtfilt).  Falls back to a numpy forward-backward
+        moving average when scipy is unavailable."""
         r = self.normalized_rewards()
         if r.shape[-1] < 15:
             return r
+        try:
+            from scipy.signal import butter, filtfilt
+        except ImportError:
+            return _smooth_moving_average(r, cutoff)
+        b, a = butter(2, cutoff)
         return filtfilt(b, a, r, axis=-1)
 
     def seed_band(self, cutoff: float = 0.05) -> tuple[np.ndarray, np.ndarray]:
@@ -83,58 +98,86 @@ class History:
         return r.mean(axis=0), r.std(axis=0)
 
 
+def _smooth_moving_average(r: np.ndarray, cutoff: float) -> np.ndarray:
+    """Scipy-free zero-phase smoother: an edge-padded moving average of
+    width ~1/cutoff applied forward then backward (symmetric kernel, so the
+    result is zero-phase like filtfilt; slightly softer roll-off)."""
+    win = max(3, int(round(1.0 / max(cutoff, 1e-3))))
+    win = min(win, r.shape[-1])
+    kernel = np.ones(win) / win
+    pad = (win // 2, win - 1 - win // 2)
+
+    def one_pass(x: np.ndarray) -> np.ndarray:
+        return np.convolve(np.pad(x, pad, mode="edge"), kernel, mode="valid")
+
+    sm = np.apply_along_axis(one_pass, -1, r)
+    sm = np.apply_along_axis(lambda x: one_pass(x[::-1])[::-1], -1, sm)
+    return sm
+
+
+def as_agent(agent_or_cfg, name: str | None = None) -> Agent:
+    """Coerce a bare DDPGConfig / DQNConfig into its Agent bundle (the
+    deprecation shim behind the pre-v1 ``run_online_*(..., cfg, ...)``
+    call style); Agent instances pass through."""
+    if isinstance(agent_or_cfg, Agent):
+        return agent_or_cfg
+    if isinstance(agent_or_cfg, DDPGConfig):
+        return ddpg.as_agent(agent_or_cfg)
+    if isinstance(agent_or_cfg, DQNConfig):
+        return dqn.as_agent(agent_or_cfg)
+    raise TypeError(f"expected an Agent or a DDPG/DQN config, got "
+                    f"{type(agent_or_cfg).__name__}")
+
+
 # --------------------------------------------------------------------------
-# Compiled-runner cache.  SchedulingEnv is an unhashable dataclass (its
-# SimParams hold numpy arrays), so it can't be a jit static argument; each
-# runner closes over the env instead and is cached by identity.  A live
-# entry holds a strong reference to its env, so an id() can only be
-# recycled after the entry is evicted — and eviction removes the key, so a
-# recycled id can never produce a stale hit.  Bounded FIFO keeps long
-# multi-app sweeps from pinning every retired XLA executable forever.
+# The two jitted programs.  env + agent are hashable static arguments —
+# jit's cache replaces the old id(env)-keyed runner cache — and EnvParams
+# ride as traced pytrees, so scenario changes never recompile.  Executables
+# (and the env specs they key on) live for the process: far fewer entries
+# than the old per-env-instance cache since params changes reuse programs,
+# but a sweep over many (env, agent, T) combos can call jax.clear_caches()
+# between apps if memory matters.
 # --------------------------------------------------------------------------
-_RUNNER_CACHE: dict[tuple, tuple] = {}
-_RUNNER_CACHE_MAX = 16
+@partial(jax.jit,
+         static_argnames=("env", "agent", "T", "updates_per_epoch", "explore"))
+def _single_program(key, state, env_state, env_params, *, env, agent: Agent,
+                    T: int, updates_per_epoch: int, explore: bool):
+    epoch = make_epoch_step(env, agent, env_params=env_params,
+                            updates_per_epoch=updates_per_epoch,
+                            explore=explore)
+    (state, env_state, _), (rewards, lats, moved) = jax.lax.scan(
+        epoch, (state, env_state, key), None, length=T)
+    return state, rewards, lats, moved, env_state.X
 
 
-def _lane_fn(env, cfg, T: int, updates_per_epoch: int, explore: bool):
-    """One online run as a pure function (key, agent_state, env_state) ->
-    (agent_state, rewards[T], latencies[T], moved[T], final_X)."""
-    if isinstance(cfg, DDPGConfig):
-        epoch = ddpg.make_epoch_step(env, cfg, updates_per_epoch, explore)
-    elif isinstance(cfg, DQNConfig):
-        epoch = dqn.make_epoch_step(env, cfg, updates_per_epoch, explore)
-    else:
-        raise TypeError(f"unknown agent config {type(cfg).__name__}")
-
-    def lane(key, state, env_state):
+@partial(jax.jit,
+         static_argnames=("env", "agent", "T", "updates_per_epoch", "explore",
+                          "stacked_params"))
+def _fleet_program(keys, states, env_states, env_params, *, env, agent: Agent,
+                   T: int, updates_per_epoch: int, explore: bool,
+                   stacked_params: bool):
+    def lane(key, state, env_state, lane_params):
+        epoch = make_epoch_step(env, agent, env_params=lane_params,
+                                updates_per_epoch=updates_per_epoch,
+                                explore=explore)
         (state, env_state, _), (rewards, lats, moved) = jax.lax.scan(
             epoch, (state, env_state, key), None, length=T)
         return state, rewards, lats, moved, env_state.X
 
-    return lane
+    in_axes = (0, 0, 0, 0 if stacked_params else None)
+    return jax.vmap(lane, in_axes=in_axes)(keys, states, env_states,
+                                           env_params)
 
 
-def _compiled_runner(env, cfg, T: int, updates_per_epoch: int, explore: bool,
-                     batched: bool):
-    cache_key = (id(env), cfg, int(T), int(updates_per_epoch), bool(explore),
-                 bool(batched))
-    hit = _RUNNER_CACHE.get(cache_key)
-    if hit is not None:
-        return hit[1]
-    lane = _lane_fn(env, cfg, T, updates_per_epoch, explore)
-    fn = jax.jit(jax.vmap(lane) if batched else lane)
-    while len(_RUNNER_CACHE) >= _RUNNER_CACHE_MAX:
-        _RUNNER_CACHE.pop(next(iter(_RUNNER_CACHE)))
-    _RUNNER_CACHE[cache_key] = (env, fn)
-    return fn
-
-
-def _run_single(key, env, cfg, state, T, updates_per_epoch, explore):
+def _run_single(key, env, agent_or_cfg, state, T, updates_per_epoch, explore,
+                env_params=None):
+    agent = as_agent(agent_or_cfg)
+    params = env.default_params() if env_params is None else env_params
     k_env, key = jax.random.split(key)
-    env_state = env.reset(k_env)
-    run = _compiled_runner(env, cfg, T, updates_per_epoch, explore,
-                           batched=False)
-    state, rewards, lats, moved, X = run(key, state, env_state)
+    env_state = env.reset(k_env, params)
+    state, rewards, lats, moved, X = _single_program(
+        key, state, env_state, params, env=env, agent=agent, T=int(T),
+        updates_per_epoch=int(updates_per_epoch), explore=bool(explore))
     return state, History(rewards=np.asarray(rewards),
                           latencies=np.asarray(lats),
                           moved=np.asarray(moved),
@@ -149,9 +192,12 @@ def run_online_ddpg(
     T: int,
     updates_per_epoch: int = 1,
     explore: bool = True,
+    env_params=None,
 ) -> tuple[DDPGState, History]:
-    """One online actor-critic run as a single jitted scan over epochs."""
-    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore)
+    """One online actor-critic run as a single jitted scan over epochs
+    (compat wrapper over the Agent path)."""
+    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore,
+                       env_params=env_params)
 
 
 def run_online_dqn(
@@ -162,43 +208,81 @@ def run_online_dqn(
     T: int,
     updates_per_epoch: int = 1,
     explore: bool = True,
+    env_params=None,
 ) -> tuple[DQNState, History]:
-    """One online DQN run as a single jitted scan over epochs."""
-    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore)
+    """One online DQN run as a single jitted scan over epochs (compat
+    wrapper over the Agent path)."""
+    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore,
+                       env_params=env_params)
+
+
+def run_online_agent(
+    key: jax.Array,
+    env,
+    agent: Agent,
+    state,
+    T: int,
+    updates_per_epoch: int = 1,
+    explore: bool = True,
+    env_params=None,
+):
+    """One online run of any registry agent (the v1-native single-run
+    entry point)."""
+    return _run_single(key, env, agent, state, T, updates_per_epoch, explore,
+                       env_params=env_params)
 
 
 def run_online_fleet(
     keys: jax.Array,
     env,
-    cfg,
+    agent,
     states,
     T: int,
     updates_per_epoch: int = 1,
     explore: bool = True,
     env_states=None,
+    env_params=None,
 ):
     """Fleet-batched online learning: one XLA program for [fleet] runs.
 
     ``keys``   — stacked per-lane PRNG keys ([fleet] key array);
+    ``agent``  — an api.Agent (make_agent(...)) or, for compatibility, a
+                 bare DDPGConfig / DQNConfig;
     ``states`` — per-lane agent states stacked on a leading [fleet] axis
-                 (ddpg.init_fleet / dqn.init_fleet, optionally pretrained
-                 with ddpg.offline_pretrain_fleet);
+                 (agent.init_fleet / ddpg.init_fleet / dqn.init_fleet,
+                 optionally pretrained with ddpg.offline_pretrain_fleet);
+    ``env_params`` — a single EnvParams (shared by every lane) or a STACKED
+                 EnvParams scenario fleet ([F] leading axis, e.g. from
+                 repro.dsdps.scenarios): heterogeneous workload rates,
+                 service-time jitter, noise levels, and stragglers then run
+                 as one vmapped program.  Defaults to env.default_params().
     ``env_states`` — optional stacked EnvState (SchedulingEnv.reset_fleet)
-                 for heterogeneous lanes: per-lane straggler speed factors,
-                 initial assignments, warm workload states.  When omitted,
-                 every lane resets the env exactly as the single-run API
-                 does (so fleet lane i bit-matches a run_online_* call with
-                 the same key and initial state).
+                 for heterogeneous *initial state* lanes: per-lane straggler
+                 speed factors, initial assignments, warm workload states.
+                 When omitted, every lane resets the env exactly as the
+                 single-run API does (so fleet lane i bit-matches a
+                 run_online_* call with the same key, initial state, and
+                 params lane).
 
     Returns (stacked agent states, History with [fleet, T] traces)."""
+    agent = as_agent(agent)
     keys = jnp.asarray(keys)
+    if env_params is None:
+        env_params = env.default_params()
+        stacked = False
+    else:
+        stacked = params_are_stacked(env, env_params)
     if env_states is None:
         pairs = jax.vmap(jax.random.split)(keys)          # [F, 2] keys
         k_env, keys = pairs[:, 0], pairs[:, 1]
-        env_states = jax.vmap(env.reset)(k_env)
-    run = _compiled_runner(env, cfg, T, updates_per_epoch, explore,
-                           batched=True)
-    states, rewards, lats, moved, X = run(keys, states, env_states)
+        if stacked:
+            env_states = jax.vmap(env.reset)(k_env, env_params)
+        else:
+            env_states = jax.vmap(lambda k: env.reset(k, env_params))(k_env)
+    states, rewards, lats, moved, X = _fleet_program(
+        keys, states, env_states, env_params, env=env, agent=agent, T=int(T),
+        updates_per_epoch=int(updates_per_epoch), explore=bool(explore),
+        stacked_params=bool(stacked))
     return states, History(rewards=np.asarray(rewards),
                            latencies=np.asarray(lats),
                            moved=np.asarray(moved),

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api
 from repro.core import networks as nets
 from repro.core.exploration import EpsilonSchedule, perturb_proto
 from repro.core.knn_projection import knn_actions_exact, knn_actions_jax
@@ -195,42 +196,59 @@ def tick(state: DDPGState) -> DDPGState:
 
 
 # --------------------------------------------------------------------------
-# Fused online epoch: select → env.step → store → update×U → tick as ONE
-# scan body.  This is the building block of the fleet runner (core/agent.py):
-# a whole online-learning run is a single `jax.lax.scan` over epochs, and a
-# fleet of independent runs is `jax.vmap` of that scan.  The running
-# reward-standardization statistics (r_mean/r_var/r_count) live in DDPGState
-# and therefore ride the scan carry automatically.
+# The Agent-interface adapter (functional core API v1).  The fused online
+# epoch — select → env.step → store → update×U → tick as ONE scan body —
+# now lives in the generic api.make_epoch_step; these module-level pure
+# functions implement its per-agent hooks.  The running reward-
+# standardization statistics (r_mean/r_var/r_count) live in DDPGState and
+# therefore ride the scan carry automatically.
 # --------------------------------------------------------------------------
+def _agent_select(key, cfg: DDPGConfig, state, s_vec, env_state, explore):
+    a = select_action(key, state, cfg, s_vec, explore=explore,
+                      exact_host_knn=False)
+    return a, a.reshape(-1)
+
+
+def _agent_observe(cfg: DDPGConfig, state, s_vec, aux, reward, s_next):
+    return store(state, s_vec, aux, reward, s_next,
+                 reward_scale=cfg.reward_scale)
+
+
+def _agent_update(key, cfg: DDPGConfig, state):
+    state, _ = update_step(key, state, cfg)
+    return state
+
+
+def _agent_tick(cfg: DDPGConfig, state):
+    return tick(state)
+
+
+def as_agent(cfg: DDPGConfig) -> api.Agent:
+    """The actor-critic method as a pluggable Agent bundle."""
+    return api.Agent(name="ddpg", cfg=cfg, init_fn=init_state,
+                     select_fn=_agent_select, observe_fn=_agent_observe,
+                     update_fn=_agent_update, tick_fn=_agent_tick)
+
+
+def agent_factory(env, **overrides) -> api.Agent:
+    """Registry hook: size a DDPGConfig for ``env`` (or pass ``cfg=``)."""
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
+                         state_dim=env.state_dim, **overrides)
+    return as_agent(cfg)
+
+
+api.register_agent("ddpg", agent_factory)
+
+
 def make_epoch_step(env, cfg: DDPGConfig, updates_per_epoch: int = 1,
-                    explore: bool = True):
-    """Scan body over decision epochs.
-
-    carry = (DDPGState, EnvState, key); per-epoch output is
-    (reward, latency_ms, moved).  The key-splitting discipline matches the
-    legacy Python loop (agent.run_online_ddpg_python) exactly, so the scan
-    runner reproduces its trace — tested in tests/test_fleet_runner.py."""
-    def epoch_step(carry, _):
-        state, env_state, key = carry
-        key, k_act, k_step, k_upd = jax.random.split(key, 4)
-        s_vec = env.state_vector(env_state)
-        action = select_action(k_act, state, cfg, s_vec, explore=explore,
-                               exact_host_knn=False)
-        out = env.step(k_step, env_state, action)
-        s_next = env.state_vector(out.state)
-        state = store(state, s_vec, action.reshape(-1), out.reward, s_next,
-                      reward_scale=cfg.reward_scale)
-
-        def upd(st, k):
-            st, _ = update_step(k, st, cfg)
-            return st, None
-
-        state, _ = jax.lax.scan(
-            upd, state, jax.random.split(k_upd, updates_per_epoch))
-        state = tick(state)
-        return (state, out.state, key), (out.reward, out.latency_ms, out.moved)
-
-    return epoch_step
+                    explore: bool = True, env_params=None):
+    """Scan body over decision epochs (compat wrapper over the generic
+    api.make_epoch_step; key discipline matches run_online_ddpg_python)."""
+    return api.make_epoch_step(env, as_agent(cfg), env_params=env_params,
+                               updates_per_epoch=updates_per_epoch,
+                               explore=explore)
 
 
 def init_fleet(key: jax.Array, cfg: DDPGConfig, fleet: int) -> DDPGState:
@@ -246,14 +264,24 @@ def offline_pretrain_fleet(
     env,
     n_samples: int = 10_000,
     n_updates: int = 2_000,
+    env_params=None,
 ) -> DDPGState:
     """vmap of offline_pretrain over stacked lanes: every lane collects its
     own random-action transitions and pretrains its own nets, all in one
-    XLA program."""
+    XLA program.  ``env_params`` may be a single EnvParams or a stacked
+    scenario fleet (each lane then pretrains under its own scenario)."""
+    if env_params is not None and api.params_are_stacked(env, env_params):
+        return jax.vmap(
+            lambda k, s, p: offline_pretrain(k, s, cfg, env,
+                                             n_samples=n_samples,
+                                             n_updates=n_updates,
+                                             env_params=p)
+        )(keys, states, env_params)
     return jax.vmap(
         lambda k, s: offline_pretrain(k, s, cfg, env,
                                       n_samples=n_samples,
-                                      n_updates=n_updates)
+                                      n_updates=n_updates,
+                                      env_params=env_params)
     )(keys, states)
 
 
@@ -268,9 +296,9 @@ def offline_pretrain(
     env,
     n_samples: int = 10_000,
     n_updates: int = 2_000,
+    env_params=None,
 ) -> DDPGState:
-    from repro.dsdps.env import SchedulingEnv  # noqa: F401 (typing only)
-
+    params = env.default_params() if env_params is None else env_params
     k_env, k_upd = jax.random.split(key)
 
     @jax.jit
@@ -278,13 +306,13 @@ def offline_pretrain(
         env_state = carry
         k_a, k_step = jax.random.split(k)
         action = env.random_assignment(k_a)
-        out = env.step(k_step, env_state, action)
-        s_vec = env.state_vector(env_state)
-        s_next_vec = env.state_vector(out.state)
+        out = env.step(k_step, env_state, action, params)
+        s_vec = env.state_vector(env_state, params)
+        s_next_vec = env.state_vector(out.state, params)
         return out.state, (s_vec, action.reshape(-1),
                            out.reward * cfg.reward_scale, s_next_vec)
 
-    env_state = env.reset(k_env)
+    env_state = env.reset(k_env, params)
     keys = jax.random.split(k_env, n_samples)
     env_state, (S, A, R, SN) = jax.lax.scan(collect, env_state, keys)
 

@@ -13,6 +13,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import api
 from repro.core import networks as nets
 from repro.core.exploration import EpsilonSchedule, epsilon_greedy
 from repro.core.replay import Replay, replay_add, replay_init, replay_sample
@@ -116,34 +117,55 @@ def tick(state: DQNState) -> DQNState:
 
 
 # --------------------------------------------------------------------------
-# Fused online epoch as a scan body (mirrors ddpg.make_epoch_step) — the
-# DQN lane program of the fleet runner in core/agent.py.
+# Agent-interface adapter (mirrors ddpg's) — the DQN hooks of the generic
+# fused epoch body in api.make_epoch_step.
 # --------------------------------------------------------------------------
+def _agent_select(key, cfg: DQNConfig, state, s_vec, env_state, explore):
+    move = select_move(key, state, cfg, s_vec, explore=explore)
+    return apply_move(env_state.X, move, cfg.n_machines), move
+
+
+def _agent_observe(cfg: DQNConfig, state, s_vec, aux, reward, s_next):
+    return store(state, s_vec, aux, reward, s_next,
+                 reward_scale=cfg.reward_scale)
+
+
+def _agent_update(key, cfg: DQNConfig, state):
+    state, _ = update_step(key, state, cfg)
+    return state
+
+
+def _agent_tick(cfg: DQNConfig, state):
+    return tick(state)
+
+
+def as_agent(cfg: DQNConfig) -> api.Agent:
+    """The DQN baseline as a pluggable Agent bundle."""
+    return api.Agent(name="dqn", cfg=cfg, init_fn=init_state,
+                     select_fn=_agent_select, observe_fn=_agent_observe,
+                     update_fn=_agent_update, tick_fn=_agent_tick)
+
+
+def agent_factory(env, **overrides) -> api.Agent:
+    """Registry hook: size a DQNConfig for ``env`` (or pass ``cfg=``)."""
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = DQNConfig(n_executors=env.N, n_machines=env.M,
+                        state_dim=env.state_dim, **overrides)
+    return as_agent(cfg)
+
+
+api.register_agent("dqn", agent_factory)
+
+
 def make_epoch_step(env, cfg: DQNConfig, updates_per_epoch: int = 1,
-                    explore: bool = True):
+                    explore: bool = True, env_params=None):
     """carry = (DQNState, EnvState, key); emits (reward, latency_ms, moved).
-    Key-splitting matches agent.run_online_dqn_python exactly."""
-    def epoch_step(carry, _):
-        state, env_state, key = carry
-        key, k_act, k_step, k_upd = jax.random.split(key, 4)
-        s_vec = env.state_vector(env_state)
-        move = select_move(k_act, state, cfg, s_vec, explore=explore)
-        action = apply_move(env_state.X, move, cfg.n_machines)
-        out = env.step(k_step, env_state, action)
-        s_next = env.state_vector(out.state)
-        state = store(state, s_vec, move, out.reward, s_next,
-                      reward_scale=cfg.reward_scale)
-
-        def upd(st, k):
-            st, _ = update_step(k, st, cfg)
-            return st, None
-
-        state, _ = jax.lax.scan(
-            upd, state, jax.random.split(k_upd, updates_per_epoch))
-        state = tick(state)
-        return (state, out.state, key), (out.reward, out.latency_ms, out.moved)
-
-    return epoch_step
+    Compat wrapper over api.make_epoch_step — key-splitting matches
+    agent.run_online_dqn_python exactly."""
+    return api.make_epoch_step(env, as_agent(cfg), env_params=env_params,
+                               updates_per_epoch=updates_per_epoch,
+                               explore=explore)
 
 
 def init_fleet(key: jax.Array, cfg: DQNConfig, fleet: int) -> DQNState:

@@ -18,7 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api
 from repro.dsdps.env import SchedulingEnv
+from repro.dsdps.simulator import measured_latency_ms
 
 
 def features(env: SchedulingEnv, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -57,6 +59,29 @@ def features(env: SchedulingEnv, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return feats
 
 
+def fit_theta(key: jax.Array, env: SchedulingEnv, n_samples: int = 400,
+              ridge_lambda: float = 1e-3) -> jnp.ndarray:
+    """Collect (random schedule, measured latency) pairs and fit the ridge
+    regressor — [25]'s offline profiling phase as one pure jax function
+    (jit/vmap-safe, so a fleet of model-based lanes can each fit its own
+    model in one program)."""
+    keys = jax.random.split(key, n_samples)
+    speed = jnp.asarray(env.cluster.speed_factors())
+
+    def sample_one(k):
+        k_a, k_n = jax.random.split(k)
+        X = env.random_assignment(k_a)
+        w = env.workload.init()
+        y = measured_latency_ms(k_n, X, w, env.params, env.cluster,
+                                speed=speed, noise_sigma=env.noise_sigma)
+        return features(env, X, w), y
+
+    F, Y = jax.vmap(sample_one)(keys)
+    F = jnp.concatenate([F, jnp.ones((F.shape[0], 1))], axis=1)
+    A = F.T @ F + ridge_lambda * jnp.eye(F.shape[1])
+    return jnp.linalg.solve(A, F.T @ Y)
+
+
 @dataclasses.dataclass
 class ModelBasedScheduler:
     env: SchedulingEnv
@@ -66,25 +91,8 @@ class ModelBasedScheduler:
     # -- model fitting ------------------------------------------------------
     def fit(self, key: jax.Array, n_samples: int = 400) -> "ModelBasedScheduler":
         """Collect (random schedule, measured latency) pairs and fit ridge."""
-        env = self.env
-        keys = jax.random.split(key, n_samples)
-
-        speed = jnp.asarray(env.cluster.speed_factors())
-
-        @jax.jit
-        def sample_one(k):
-            k_a, k_n = jax.random.split(k)
-            X = env.random_assignment(k_a)
-            w = env.workload.init()
-            from repro.dsdps.simulator import measured_latency_ms
-            y = measured_latency_ms(k_n, X, w, env.params, env.cluster,
-                                    speed=speed, noise_sigma=env.noise_sigma)
-            return features(env, X, w), y
-
-        F, Y = jax.vmap(sample_one)(keys)
-        F = jnp.concatenate([F, jnp.ones((F.shape[0], 1))], axis=1)
-        A = F.T @ F + self.ridge_lambda * jnp.eye(F.shape[1])
-        self.theta = jnp.linalg.solve(A, F.T @ Y)
+        self.theta = jax.jit(fit_theta, static_argnums=(1, 2))(
+            key, self.env, n_samples, self.ridge_lambda)
         return self
 
     def predict(self, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -115,3 +123,68 @@ class ModelBasedScheduler:
             for i in range(n):
                 X, _ = best_move_for(X, jnp.asarray(i))
         return X
+
+
+# --------------------------------------------------------------------------
+# Agent-interface adapter: [25] as a non-learning Agent.  ``init`` runs the
+# offline profiling + ridge fit (the agent state IS the fitted theta);
+# ``select`` applies one step of model-guided local search per decision
+# epoch — the best single-executor move under the model's latency
+# prediction (the no-op move is a candidate, so "stay" is always allowed).
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelBasedAgentConfig:
+    env: SchedulingEnv          # hashable by identity (static spec)
+    fit_samples: int = 400
+    ridge_lambda: float = 1e-3
+
+
+def _agent_init(key, cfg: ModelBasedAgentConfig):
+    return fit_theta(key, cfg.env, cfg.fit_samples, cfg.ridge_lambda)
+
+
+def _agent_select(key, cfg: ModelBasedAgentConfig, theta, s_vec, env_state,
+                  explore):
+    env = cfg.env
+    n, m = env.N, env.M
+    X, w = env_state.X, env_state.w
+
+    def predict_move(move):
+        i, j = move // m, move % m
+        Xj = X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype))
+        f = jnp.concatenate([features(env, Xj, w), jnp.ones(1)])
+        return f @ theta
+
+    preds = jax.vmap(predict_move)(jnp.arange(n * m))
+    best = jnp.argmin(preds)
+    i, j = best // m, best % m
+    X_new = X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype))
+    return X_new, jnp.zeros(())
+
+
+def _agent_observe(cfg, theta, s_vec, aux, reward, s_next):
+    return theta
+
+
+def _agent_update(key, cfg, theta):
+    return theta
+
+
+def _agent_tick(cfg, theta):
+    return theta
+
+
+def as_agent(cfg: ModelBasedAgentConfig) -> api.Agent:
+    return api.Agent(name="model_based", cfg=cfg, init_fn=_agent_init,
+                     select_fn=_agent_select, observe_fn=_agent_observe,
+                     update_fn=_agent_update, tick_fn=_agent_tick)
+
+
+def agent_factory(env, **overrides) -> api.Agent:
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = ModelBasedAgentConfig(env=env, **overrides)
+    return as_agent(cfg)
+
+
+api.register_agent("model_based", agent_factory)

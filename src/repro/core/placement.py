@@ -41,9 +41,22 @@ class PlacementStep(NamedTuple):
     moved: jnp.ndarray
 
 
-@dataclasses.dataclass
+class PlacementParams(NamedTuple):
+    """Vmappable scenario parameters of the placement env (mirrors
+    dsdps.simulator.EnvParams for the TPU instantiation)."""
+
+    base_load: jnp.ndarray    # [E] mean tokens routed to each expert
+    speed: jnp.ndarray        # [D] device speed factors
+    noise_sigma: jnp.ndarray  # scalar measurement noise
+    load_jitter: jnp.ndarray  # scalar per-epoch routing-drift sigma
+
+
+@dataclasses.dataclass(eq=False)
 class ExpertPlacementEnv:
-    """MoE expert placement on a (ring) ICI topology."""
+    """MoE expert placement on a (ring) ICI topology.
+
+    ``eq=False`` keeps identity hash/eq so the env is a jit static spec;
+    scenario numerics travel in PlacementParams."""
 
     num_experts: int
     num_devices: int
@@ -61,8 +74,19 @@ class ExpertPlacementEnv:
         self._base_load = jnp.asarray(
             rng.permutation(pop / pop.sum()) * self.tokens_per_step)
         self.N, self.M = self.num_experts, self.num_devices
+        self._default_params: PlacementParams | None = None
 
     # --- SchedulingEnv surface --------------------------------------------
+    def default_params(self) -> PlacementParams:
+        if self._default_params is None:
+            self._default_params = PlacementParams(
+                base_load=self._base_load,
+                speed=jnp.ones(self.M),
+                noise_sigma=jnp.asarray(self.noise_sigma, jnp.float32),
+                load_jitter=jnp.asarray(self.jitter, jnp.float32),
+            )
+        return self._default_params
+
     @property
     def state_dim(self) -> int:
         return self.N * self.M + self.N
@@ -79,16 +103,20 @@ class ExpertPlacementEnv:
         idx = jax.random.randint(key, (self.N,), 0, self.M)
         return jax.nn.one_hot(idx, self.M, dtype=jnp.float32)
 
-    def state_vector(self, s: PlacementState) -> jnp.ndarray:
-        w_norm = s.w / (self._base_load + 1e-9)
+    def state_vector(self, s: PlacementState,
+                     params: PlacementParams | None = None) -> jnp.ndarray:
+        p = self.default_params() if params is None else params
+        w_norm = s.w / (p.base_load + 1e-9)
         return jnp.concatenate([s.X.reshape(-1), w_norm])
 
-    def reset(self, key: jax.Array, X0: jnp.ndarray | None = None) -> PlacementState:
+    def reset(self, key: jax.Array, params: PlacementParams | None = None,
+              X0: jnp.ndarray | None = None) -> PlacementState:
+        p = self.default_params() if params is None else params
         X = self.round_robin_assignment() if X0 is None else X0
         return PlacementState(
-            X=X, w=self._base_load,
+            X=X, w=p.base_load,
             epoch=jnp.zeros((), jnp.int32),
-            speed=jnp.ones(self.M),
+            speed=p.speed,
         )
 
     # --- cost model ----------------------------------------------------------
@@ -110,14 +138,16 @@ class ExpertPlacementEnv:
                  speed: jnp.ndarray | None = None) -> jnp.ndarray:
         return self.step_time_ms(X, w, speed)
 
-    def step(self, key: jax.Array, s: PlacementState, action: jnp.ndarray) -> PlacementStep:
+    def step(self, key: jax.Array, s: PlacementState, action: jnp.ndarray,
+             params: PlacementParams | None = None) -> PlacementStep:
+        p = self.default_params() if params is None else params
         k_noise, k_w = jax.random.split(key)
         moved = (jnp.abs(action - s.X).sum(-1) > 0).sum()
         t = self.step_time_ms(action, s.w, s.speed)
-        t = t * jnp.exp(jax.random.normal(k_noise, ()) * self.noise_sigma)
+        t = t * jnp.exp(jax.random.normal(k_noise, ()) * p.noise_sigma)
         # expert popularity drifts (routing distribution shifts during training)
-        z = jax.random.normal(k_w, s.w.shape) * self.jitter
-        w_next = s.w + 0.3 * (self._base_load * jnp.exp(z) - s.w)
+        z = jax.random.normal(k_w, s.w.shape) * p.load_jitter
+        w_next = s.w + 0.3 * (p.base_load * jnp.exp(z) - s.w)
         nxt = PlacementState(X=action, w=w_next, epoch=s.epoch + 1, speed=s.speed)
         return PlacementStep(state=nxt, reward=-t, latency_ms=t, moved=moved)
 

@@ -1,11 +1,18 @@
 """Storm's default scheduler: round-robin executor→slot→machine assignment.
 
 Results in near-even workload spread with no communication awareness —
-the paper's "Default" baseline."""
+the paper's "Default" baseline.  Also exposed as a trivial non-learning
+:class:`~repro.core.api.Agent` (``make_agent("round_robin", env)``) so the
+baseline runs through the same fleet runner as the DRL methods."""
 from __future__ import annotations
 
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import api
 
 
 def round_robin(n_executors: int, n_machines: int,
@@ -18,3 +25,53 @@ def round_robin(n_executors: int, n_machines: int,
     X = np.zeros((n_executors, n_machines), dtype=np.float32)
     X[np.arange(n_executors), idx] = 1.0
     return jnp.asarray(X)
+
+
+# --------------------------------------------------------------------------
+# Agent-interface adapter: a stateless policy whose "state" is just an
+# epoch counter; observe/update are identity.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoundRobinConfig:
+    n_executors: int
+    n_machines: int
+
+
+def _agent_init(key, cfg: RoundRobinConfig):
+    return jnp.zeros((), jnp.int32)
+
+
+def _agent_select(key, cfg: RoundRobinConfig, state, s_vec, env_state,
+                  explore):
+    idx = jnp.arange(cfg.n_executors) % cfg.n_machines
+    X = jax.nn.one_hot(idx, cfg.n_machines, dtype=jnp.float32)
+    return X, jnp.zeros(())
+
+
+def _agent_observe(cfg, state, s_vec, aux, reward, s_next):
+    return state
+
+
+def _agent_update(key, cfg, state):
+    return state
+
+
+def _agent_tick(cfg, state):
+    return state + 1
+
+
+def as_agent(cfg: RoundRobinConfig) -> api.Agent:
+    return api.Agent(name="round_robin", cfg=cfg, init_fn=_agent_init,
+                     select_fn=_agent_select, observe_fn=_agent_observe,
+                     update_fn=_agent_update, tick_fn=_agent_tick)
+
+
+def agent_factory(env, **overrides) -> api.Agent:
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = RoundRobinConfig(n_executors=env.N, n_machines=env.M,
+                               **overrides)
+    return as_agent(cfg)
+
+
+api.register_agent("round_robin", agent_factory)

@@ -1,12 +1,24 @@
 from repro.dsdps.topology import Component, Edge, Topology
 from repro.dsdps.cluster import ClusterSpec, PAPER_CLUSTER
-from repro.dsdps.simulator import SimParams, average_tuple_time_ms, build_sim_params
-from repro.dsdps.workload import WorkloadProcess
+from repro.dsdps.simulator import (EnvParams, SimParams,
+                                   average_tuple_time_from_params,
+                                   average_tuple_time_ms, build_sim_params,
+                                   params_stacked, perturb_rates,
+                                   perturb_service, scale_rates,
+                                   stack_env_params, to_env_params,
+                                   with_noise_sigma, with_speed,
+                                   with_straggler)
+from repro.dsdps.workload import WorkloadProcess, step_rates
 from repro.dsdps.env import EnvState, SchedulingEnv, StepOut
-from repro.dsdps import apps
+from repro.dsdps import apps, scenarios
 
 __all__ = [
     "Component", "Edge", "Topology", "ClusterSpec", "PAPER_CLUSTER",
-    "SimParams", "average_tuple_time_ms", "build_sim_params",
-    "WorkloadProcess", "EnvState", "SchedulingEnv", "StepOut", "apps",
+    "SimParams", "EnvParams", "average_tuple_time_ms",
+    "average_tuple_time_from_params", "build_sim_params", "to_env_params",
+    "params_stacked",
+    "perturb_rates", "perturb_service", "scale_rates", "stack_env_params",
+    "with_noise_sigma", "with_speed", "with_straggler",
+    "WorkloadProcess", "step_rates", "EnvState", "SchedulingEnv", "StepOut",
+    "apps", "scenarios",
 ]

@@ -4,6 +4,19 @@ State   s = (X, w)   — current assignment + spout arrival rates
 Action  a ∈ {0,1}^{N×M}, row one-hot — new assignment
 Reward  r = −(measured average tuple processing time, ms)
 
+Functional core (gymnax/brax-style): ``SchedulingEnv`` is a thin STATIC
+spec — shapes, topology structure, cluster constants — hashable by
+identity so it can ride jit as a static argument.  Everything a scenario
+might vary (service costs, machine speeds, measurement noise, workload
+rate parameters) lives in an :class:`~repro.dsdps.simulator.EnvParams`
+pytree passed to ``reset(key, params)`` / ``step(key, state, action,
+params)`` / ``state_vector(state, params)``.  Stacking EnvParams on a
+leading fleet axis and vmapping these functions runs heterogeneous
+scenario fleets — workload rates × service jitter × noise × stragglers —
+as ONE XLA program (core/agent.run_online_fleet).  ``params`` defaults to
+``default_params()`` everywhere, so the pre-v1 object-style calls keep
+working unchanged.
+
 ``step`` deploys the action with minimal-delta semantics (only changed
 executors are re-assigned; the deploy cost is proportional to the number of
 moved executors, modeling the re-stabilization the paper waits out), then
@@ -18,9 +31,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dsdps.cluster import ClusterSpec, PAPER_CLUSTER
-from repro.dsdps.simulator import SimParams, build_sim_params, measured_latency_ms
+from repro.dsdps.simulator import (EnvParams, SimParams,
+                                   average_tuple_time_from_params,
+                                   build_sim_params,
+                                   measured_latency_from_params,
+                                   params_stacked)
 from repro.dsdps.topology import Topology
-from repro.dsdps.workload import WorkloadProcess
+from repro.dsdps.workload import WorkloadProcess, step_rates
 
 
 class EnvState(NamedTuple):
@@ -37,8 +54,14 @@ class StepOut(NamedTuple):
     moved: jnp.ndarray      # number of re-assigned executors
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SchedulingEnv:
+    """Static spec of one DSDPS control problem.
+
+    ``eq=False`` keeps the default identity hash/eq so instances are valid
+    jit static arguments — XLA executables are cached on (env, agent, T, …)
+    by jit itself, with all numeric content arriving via EnvParams."""
+
     topo: Topology
     workload: WorkloadProcess
     cluster: ClusterSpec = PAPER_CLUSTER
@@ -49,6 +72,16 @@ class SchedulingEnv:
         self.params: SimParams = build_sim_params(self.topo, seed=self.seed)
         self.N = self.topo.num_executors
         self.M = self.cluster.num_machines
+        self._default_params: EnvParams | None = None
+
+    # -- params ------------------------------------------------------------
+    def default_params(self) -> EnvParams:
+        """The EnvParams pytree matching this spec's declared workload,
+        cluster speeds, and noise level (cached; treat as immutable)."""
+        if self._default_params is None:
+            self._default_params = self.params.to_env_params(
+                self.cluster, self.workload, self.noise_sigma)
+        return self._default_params
 
     # -- helpers -----------------------------------------------------------
     def round_robin_assignment(self) -> jnp.ndarray:
@@ -76,9 +109,11 @@ class SchedulingEnv:
         idx = jax.random.randint(key, (self.N,), 0, self.M)
         return jax.nn.one_hot(idx, self.M, dtype=jnp.float32)
 
-    def state_vector(self, s: EnvState) -> jnp.ndarray:
+    def state_vector(self, s: EnvState,
+                     params: EnvParams | None = None) -> jnp.ndarray:
         """Flattened (X, w) fed to the DNNs — exactly the paper's state."""
-        w_norm = s.w / (jnp.asarray(self.workload.base_rates) + 1e-9)
+        p = self.default_params() if params is None else params
+        w_norm = s.w / (p.base_rates + 1e-9)
         return jnp.concatenate([s.X.reshape(-1), w_norm])
 
     @property
@@ -90,46 +125,57 @@ class SchedulingEnv:
         return self.N * self.M
 
     # -- core API ----------------------------------------------------------
-    def reset(self, key: jax.Array, X0: jnp.ndarray | None = None) -> EnvState:
+    def reset(self, key: jax.Array, params: EnvParams | None = None,
+              X0: jnp.ndarray | None = None) -> EnvState:
+        p = self.default_params() if params is None else params
         X = self.round_robin_assignment() if X0 is None else X0
         return EnvState(
             X=X,
-            w=self.workload.init(),
+            w=p.base_rates,
             epoch=jnp.zeros((), jnp.int32),
-            speed=jnp.asarray(self.cluster.speed_factors(), jnp.float32),
+            speed=p.speed,
         )
 
     def evaluate(self, X: jnp.ndarray, w: jnp.ndarray,
                  speed: jnp.ndarray | None = None,
                  same_proc: jnp.ndarray | None = None,
-                 n_procs: jnp.ndarray | None = None) -> jnp.ndarray:
+                 n_procs: jnp.ndarray | None = None,
+                 params: EnvParams | None = None) -> jnp.ndarray:
         """Noise-free steady-state latency for an assignment (ms)."""
-        from repro.dsdps.simulator import average_tuple_time_ms
-        if speed is None:
-            speed = jnp.asarray(self.cluster.speed_factors())
-        return average_tuple_time_ms(X, w, self.params, self.cluster, speed,
-                                     same_proc=same_proc, n_procs=n_procs)
+        p = self.default_params() if params is None else params
+        return average_tuple_time_from_params(
+            X, w, p, self.params, self.cluster, speed=speed,
+            same_proc=same_proc, n_procs=n_procs)
 
-    def step(self, key: jax.Array, s: EnvState, action: jnp.ndarray) -> StepOut:
+    def step(self, key: jax.Array, s: EnvState, action: jnp.ndarray,
+             params: EnvParams | None = None) -> StepOut:
+        p = self.default_params() if params is None else params
         k_noise, k_w = jax.random.split(key)
         moved = (jnp.abs(action - s.X).sum(-1) > 0).sum()
-        lat = measured_latency_ms(
-            k_noise, action, s.w, self.params, self.cluster, s.speed,
-            noise_sigma=self.noise_sigma,
-        )
-        w_next = self.workload.step(k_w, s.w, s.epoch)
+        lat = measured_latency_from_params(
+            k_noise, action, s.w, p, self.params, self.cluster, speed=s.speed)
+        w_next = step_rates(k_w, s.w, s.epoch, p.base_rates, p.rate_jitter,
+                            p.rate_revert, p.shift_epoch, p.shift_factor)
         nxt = EnvState(X=action, w=w_next, epoch=s.epoch + 1, speed=s.speed)
         return StepOut(state=nxt, reward=-lat, latency_ms=lat, moved=moved)
 
     def with_straggler(self, s: EnvState, machine: int, factor: float) -> EnvState:
+        """Slow one machine mid-run (state-level; for param-level scenario
+        fleets use repro.dsdps.scenarios / simulator.with_straggler)."""
         return s._replace(speed=s.speed.at[machine].set(factor))
 
     def reset_fleet(self, keys: jax.Array, X0: jnp.ndarray | None = None,
-                    speed_factors: jnp.ndarray | None = None) -> EnvState:
+                    speed_factors: jnp.ndarray | None = None,
+                    params: EnvParams | None = None) -> EnvState:
         """Stacked initial states for ``run_online_fleet``: one EnvState per
-        lane ([F] leading axis).  ``speed_factors`` ([F, M]) builds a fleet
-        of straggler scenarios — per-lane machine slowdowns."""
-        states = jax.vmap(lambda k: self.reset(k, X0))(keys)
+        lane ([F] leading axis).  ``params`` may be a single EnvParams or a
+        stacked scenario fleet; ``speed_factors`` ([F, M]) is the legacy way
+        to build per-lane straggler scenarios."""
+        p = self.default_params() if params is None else params
+        if params_stacked(p, self.default_params()):
+            states = jax.vmap(lambda k, pp: self.reset(k, pp, X0=X0))(keys, p)
+        else:
+            states = jax.vmap(lambda k: self.reset(k, p, X0=X0))(keys)
         if speed_factors is not None:
             states = states._replace(
                 speed=jnp.asarray(speed_factors, jnp.float32))

@@ -1,0 +1,95 @@
+"""Named scenario fleets — stacked EnvParams for heterogeneous lanes.
+
+Each builder returns an ``EnvParams`` pytree with a leading ``[fleet]``
+axis; ``core.agent.run_online_fleet(..., env_params=...)`` vmaps the fused
+epoch scan over it, so "one slow machine per lane" × "diurnal load" ×
+"noisy telemetry" all execute as ONE XLA program.  This is the Decima-style
+train-over-a-distribution-of-workloads discipline the paper's pluggable
+framework implies.
+
+    from repro.dsdps import scenarios
+    params = scenarios.build("one_slow_machine", env, fleet=8)
+    states, hist = run_online_fleet(keys, env, agent, agent_states, T=300,
+                                    env_params=params)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dsdps.simulator import (EnvParams, perturb_rates, perturb_service,
+                                   scale_rates, stack_env_params,
+                                   with_noise_sigma, with_straggler)
+
+
+def uniform(env, fleet: int) -> EnvParams:
+    """Every lane runs the env's declared parameters (pure seed sweep)."""
+    p = env.default_params()
+    return stack_env_params([p] * fleet)
+
+
+def one_slow_machine(env, fleet: int, factor: float = 0.35) -> EnvParams:
+    """Lane i slows machine ``i % M`` to ``factor`` of nominal speed — the
+    straggler-mitigation stress, one straggler location per lane."""
+    p = env.default_params()
+    return stack_env_params(
+        [with_straggler(p, i % env.M, factor) for i in range(fleet)])
+
+
+def diurnal_rate(env, fleet: int, amplitude: float = 0.4) -> EnvParams:
+    """Lane i's base rates scaled to a point on a daily load curve:
+    1 + amplitude*sin(2π i/fleet) — samples the operating regimes a
+    day/night traffic cycle sweeps through."""
+    p = env.default_params()
+    lanes = []
+    for i in range(fleet):
+        phase = 2.0 * jnp.pi * i / max(fleet, 1)
+        lanes.append(scale_rates(p, 1.0 + amplitude * jnp.sin(phase)))
+    return stack_env_params(lanes)
+
+
+def high_noise(env, fleet: int, sigma: float = 0.12) -> EnvParams:
+    """Every lane measures rewards through ``sigma`` lognormal noise —
+    4× the paper's telemetry noise; stresses learning robustness."""
+    p = env.default_params()
+    return stack_env_params([with_noise_sigma(p, sigma)] * fleet)
+
+
+def mixed(env, fleet: int, seed: int = 0) -> EnvParams:
+    """Round-robin over the named regimes plus per-lane service-time and
+    rate jitter — the 'as many scenarios as you can imagine' fleet."""
+    p = env.default_params()
+    key = jax.random.PRNGKey(seed)
+    lanes = []
+    for i in range(fleet):
+        k_svc, k_rate = jax.random.split(jax.random.fold_in(key, i))
+        lane = perturb_rates(perturb_service(p, k_svc, 0.10), k_rate, 0.10)
+        kind = i % 4
+        if kind == 1:
+            lane = with_straggler(lane, i % env.M, 0.4)
+        elif kind == 2:
+            lane = scale_rates(lane, 1.0 + 0.4 * jnp.sin(
+                2.0 * jnp.pi * i / max(fleet, 1)))
+        elif kind == 3:
+            lane = with_noise_sigma(lane, 0.12)
+        lanes.append(lane)
+    return stack_env_params(lanes)
+
+
+SCENARIOS = {
+    "uniform": uniform,
+    "one_slow_machine": one_slow_machine,
+    "diurnal_rate": diurnal_rate,
+    "high_noise": high_noise,
+    "mixed": mixed,
+}
+
+
+def build(name: str, env, fleet: int, **kwargs) -> EnvParams:
+    """Stacked EnvParams for a named scenario fleet."""
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {sorted(SCENARIOS)}") from None
+    return builder(env, fleet, **kwargs)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.dsdps.cluster import ClusterSpec
 from repro.dsdps.topology import Topology
+from repro.dsdps.workload import NEVER_SHIFT, WorkloadProcess
 
 # Utilization is soft-clipped below 1 to keep latencies finite with useful
 # gradients: rho_eff = rho_cap * sigmoid-like saturation.
@@ -64,6 +66,11 @@ class SimParams:
     comp_members: tuple[tuple[int, ...], ...]   # executor ids per component
     acker_ms: float              # fixed ack/bookkeeping overhead
 
+    def to_env_params(self, cluster: ClusterSpec, workload: WorkloadProcess,
+                      noise_sigma: float = 0.03) -> "EnvParams":
+        """The vmappable numeric half of this spec as an EnvParams pytree."""
+        return to_env_params(self, cluster, workload, noise_sigma)
+
 
 def build_sim_params(topo: Topology, seed: int = 0, acker_ms: float = 0.15,
                      exec_jitter_sigma: float = 0.25) -> SimParams:
@@ -99,6 +106,226 @@ def build_sim_params(topo: Topology, seed: int = 0, acker_ms: float = 0.15,
     )
 
 
+# --------------------------------------------------------------------------
+# EnvParams — the vmappable half of the environment.
+#
+# SimParams above is the *structural* spec (routing schedule, component
+# membership, integer indices): hashable-ish, host-side, jit-static.
+# EnvParams below is the *numeric* half as a pytree of jnp arrays: anything
+# a scenario might perturb — per-executor service costs, machine speeds,
+# measurement noise, workload rate parameters — is a traced argument, so a
+# fleet of heterogeneous scenarios is just a stacked EnvParams vmapped
+# through one XLA program (gymnax/brax-style functional env API).
+# --------------------------------------------------------------------------
+class EnvParams(NamedTuple):
+    """Per-scenario numeric parameters (all jnp arrays; leading [F] axis
+    when stacked into a scenario fleet)."""
+
+    routing: jnp.ndarray             # [N, N] executor routing matrix
+    flow_solve: jnp.ndarray          # [N, N] (I - R^T)^-1
+    service_ms: jnp.ndarray          # [N] true CPU ms / tuple
+    nominal_service_ms: jnp.ndarray  # [N] component-level profiled mean
+    tuple_bytes: jnp.ndarray         # [N]
+    acker_ms: jnp.ndarray            # scalar ack/bookkeeping overhead
+    speed: jnp.ndarray               # [M] machine speed factors
+    noise_sigma: jnp.ndarray         # scalar measurement-noise sigma
+    base_rates: jnp.ndarray          # [S] spout base arrival rates
+    rate_jitter: jnp.ndarray         # scalar workload lognormal sigma
+    rate_revert: jnp.ndarray         # scalar mean-reversion strength
+    shift_epoch: jnp.ndarray         # scalar int32 (NEVER_SHIFT = disabled)
+    shift_factor: jnp.ndarray        # scalar Fig-12 step-change factor
+
+
+def to_env_params(sim: SimParams, cluster: ClusterSpec,
+                  workload: WorkloadProcess,
+                  noise_sigma: float = 0.03) -> EnvParams:
+    """Bundle a built SimParams + cluster + workload spec into the traced
+    EnvParams pytree (the `build_sim_params -> to_env_params` path)."""
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    shift = workload.shift_epoch if workload.shift_epoch is not None \
+        else NEVER_SHIFT
+    return EnvParams(
+        routing=f32(sim.routing),
+        flow_solve=f32(sim.flow_solve),
+        service_ms=f32(sim.service_ms),
+        nominal_service_ms=f32(sim.nominal_service_ms),
+        tuple_bytes=f32(sim.tuple_bytes),
+        acker_ms=f32(sim.acker_ms),
+        speed=f32(cluster.speed_factors()),
+        noise_sigma=f32(noise_sigma),
+        base_rates=f32(workload.base_rates),
+        rate_jitter=f32(workload.jitter),
+        rate_revert=f32(workload.revert),
+        shift_epoch=jnp.asarray(shift, jnp.int32),
+        shift_factor=f32(workload.shift_factor),
+    )
+
+
+# -- per-field randomization helpers (pure; compose + vmap for fleets) ------
+def with_noise_sigma(params: EnvParams, sigma) -> EnvParams:
+    """Replace the measurement-noise level."""
+    return params._replace(noise_sigma=jnp.asarray(sigma, jnp.float32))
+
+
+def with_speed(params: EnvParams, speed) -> EnvParams:
+    """Replace the per-machine speed-factor vector."""
+    return params._replace(speed=jnp.asarray(speed, jnp.float32))
+
+
+def with_straggler(params: EnvParams, machine: int, factor) -> EnvParams:
+    """Slow machine ``machine`` to ``factor`` of nominal speed."""
+    return params._replace(speed=params.speed.at[machine].set(factor))
+
+
+def scale_rates(params: EnvParams, factor) -> EnvParams:
+    """Scale every spout's base arrival rate (diurnal load, Fig-12 shifts)."""
+    return params._replace(base_rates=params.base_rates * factor)
+
+
+def perturb_service(params: EnvParams, key: jax.Array,
+                    sigma: float = 0.15) -> EnvParams:
+    """Lognormal (mean-1 corrected) jitter on the TRUE per-executor service
+    costs — samples 'the many factors not captured by the model' (§1)."""
+    z = jax.random.normal(key, params.service_ms.shape)
+    mult = jnp.exp(z * sigma - 0.5 * sigma ** 2)
+    return params._replace(service_ms=params.service_ms * mult)
+
+
+def perturb_rates(params: EnvParams, key: jax.Array,
+                  sigma: float = 0.15) -> EnvParams:
+    """Lognormal (mean-1 corrected) jitter on the spout base rates."""
+    z = jax.random.normal(key, params.base_rates.shape)
+    mult = jnp.exp(z * sigma - 0.5 * sigma ** 2)
+    return params._replace(base_rates=params.base_rates * mult)
+
+
+def stack_env_params(params_list) -> EnvParams:
+    """Stack per-lane EnvParams on a leading [F] fleet axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def params_stacked(params, ref) -> bool:
+    """True when ``params`` carries one more leading axis than the
+    single-scenario reference ``ref`` — THE stacked-fleet convention,
+    shared by every params-batched code path (compared on the first leaf;
+    works for any params pytree, EnvParams or PlacementParams)."""
+    leaf = jax.tree_util.tree_leaves(params)[0]
+    ref_leaf = jax.tree_util.tree_leaves(ref)[0]
+    return jnp.ndim(leaf) == jnp.ndim(ref_leaf) + 1
+
+
+def _latency_core(
+    X: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    routing,
+    flow_solve,
+    service_ms,
+    tuple_bytes,
+    acker_ms,
+    spout_ids,
+    exec_component,
+    n_components: int,
+    rev_schedule,
+    comp_members,
+    cluster: ClusterSpec,
+    speed: jnp.ndarray,
+    same_proc: jnp.ndarray | None,
+    n_procs: jnp.ndarray | None,
+) -> jnp.ndarray:
+    """Shared queueing-model body; numeric arrays may be device-traced
+    (EnvParams) or host constants (SimParams), structure is always static."""
+    R = jnp.asarray(routing)
+    n, m = X.shape
+
+    # 1. steady-state executor tuple rates (tuples/sec)
+    w_full = jnp.zeros(n).at[jnp.asarray(spout_ids)].set(w)
+    lam = jnp.asarray(flow_solve) @ w_full                            # [N]
+
+    # edge tuple rates; machine / process locality masks
+    same_mach = X @ X.T                                               # [N, N]
+    if same_proc is None:
+        same_proc = same_mach
+    else:
+        same_proc = same_proc * same_mach   # same process => same machine
+    edge_rate = lam[:, None] * R                                      # tuples/s
+    cross_proc = edge_rate * (1.0 - same_proc)       # pays ser/deser CPU
+    cross_mach = edge_rate * (1.0 - same_mach)       # additionally uses NIC
+
+    # 2. machine CPU contention.  Demand = executor service + ser/deser CPU
+    # for every inter-process tuple (the traffic-awareness mechanism that
+    # T-Storm [52] and [25] exploit: remote transfers burn CPU on both ends).
+    c_ms = jnp.asarray(service_ms)                                    # [N]
+    ser_ms = cluster.ser_base_ms + \
+        jnp.asarray(tuple_bytes) * cluster.ser_ms_per_kb / 1024.0     # [N]
+    base_demand = (X * (lam * c_ms / 1e3)[:, None]).sum(0)            # [M]
+    ser_out = (X * (cross_proc.sum(1) * ser_ms / 1e3)[:, None]).sum(0)
+    ser_in = (X * ((cross_proc * ser_ms[:, None]).sum(0) / 1e3)[:, None]).sum(0)
+    if n_procs is None:
+        # paper's schedulers: one worker process per (used) machine
+        n_procs = (X.sum(0) > 0).astype(jnp.float32)
+    proc_burn = n_procs * cluster.proc_overhead_cores                 # cores
+    # cross-component mixing interference (see ClusterSpec.mix_penalty)
+    comp_onehot = jax.nn.one_hot(jnp.asarray(exec_component),
+                                 n_components)
+    presence = jnp.clip(comp_onehot.T @ X, 0.0, 1.0)                  # [C, M]
+    n_comp = presence.sum(0)                                          # [M]
+    mix = 1.0 + cluster.mix_penalty * jnp.maximum(n_comp - 1.0, 0.0)
+    demand = (base_demand + ser_out + ser_in) * mix / speed + proc_burn
+    rho_cpu = demand / cluster.cores_per_machine
+    g_m = _congestion(rho_cpu)                                        # [M]
+
+    # 3. per-executor sojourn (service inflated by machine contention)
+    inflate = X @ (g_m / speed)                                       # [N]
+    s_eff = c_ms * inflate                                            # ms
+    rho_exec = lam * s_eff / 1e3
+    sojourn = s_eff * _congestion(rho_exec)                           # [N] ms
+
+    # 4. transfer delays: in-process queue < IPC < network (w/ NIC contention)
+    bytes_per_s = cross_mach * jnp.asarray(tuple_bytes)[:, None]
+    out_load = (X * bytes_per_s.sum(1)[:, None]).sum(0)               # [M] B/s
+    in_load = (X * bytes_per_s.sum(0)[:, None]).sum(0)                # [M] B/s
+    nic_cap = cluster.nic_bytes_per_ms * 1e3                          # B/s
+    rho_nic = jnp.maximum(out_load, in_load) / nic_cap
+    nic_g = _congestion(rho_nic)                                      # [M]
+    nic_factor = 0.5 * (X @ nic_g)[:, None] + 0.5 * (X @ nic_g)[None, :]
+    wire_ms = jnp.asarray(tuple_bytes)[:, None] / cluster.nic_bytes_per_ms
+    # ser/deser also adds *latency* on the tuple's own path when crossing
+    # process boundaries (it is in the critical path, not just CPU load):
+    # serialize at the source + deserialize at the destination.
+    ser_path = 2.0 * ser_ms[:, None]
+    d_edge = jnp.where(
+        same_proc > 0.5,
+        cluster.local_base_ms,
+        jnp.where(
+            same_mach > 0.5,
+            cluster.ipc_base_ms + ser_path,
+            cluster.net_base_ms + ser_path + wire_ms * nic_factor,
+        ),
+    )                                                                 # [N, N]
+
+    # 5. completion-time recursion, reverse topo order over components.
+    completion = sojourn  # leaves: just their own sojourn
+    for ci, downs in rev_schedule:
+        if not downs:
+            continue
+        src_ids = jnp.asarray(comp_members[ci])
+        branch_costs = []
+        for dc in downs:
+            dst_ids = jnp.asarray(comp_members[dc])
+            p = R[jnp.ix_(src_ids, dst_ids)]                          # [s, d]
+            p = p / jnp.maximum(p.sum(1, keepdims=True), 1e-12)
+            hop = d_edge[jnp.ix_(src_ids, dst_ids)] + completion[dst_ids][None, :]
+            branch_costs.append((p * hop).sum(1))                     # [s]
+        downstream = functools.reduce(jnp.maximum, branch_costs)
+        completion = completion.at[src_ids].add(downstream)
+
+    spouts = jnp.asarray(spout_ids)
+    w_safe = jnp.maximum(w, 0.0)
+    avg = (w_safe * completion[spouts]).sum() / jnp.maximum(w_safe.sum(), 1e-9)
+    return avg + acker_ms
+
+
 def average_tuple_time_ms(
     X: jnp.ndarray,              # [N, M] one-hot (rows sum to 1); float ok
     w: jnp.ndarray,              # [S] spout executor arrival rates (tuples/s)
@@ -117,97 +344,78 @@ def average_tuple_time_ms(
     them ``same_proc`` defaults to the same-machine mask.  Storm's default
     EvenScheduler spreads executors over ~10 processes/machine — pass its
     process mask to reproduce the default baseline's overhead."""
-    R = jnp.asarray(params.routing)
-    n, m = X.shape
-    speed = jnp.ones(m) if speed is None else speed
+    speed = jnp.ones(X.shape[1]) if speed is None else speed
+    return _latency_core(
+        X, w,
+        routing=params.routing,
+        flow_solve=params.flow_solve,
+        service_ms=params.service_ms,
+        tuple_bytes=params.tuple_bytes,
+        acker_ms=params.acker_ms,
+        spout_ids=params.spout_ids,
+        exec_component=params.exec_component,
+        n_components=int(params.exec_component.max()) + 1,
+        rev_schedule=params.rev_schedule,
+        comp_members=params.comp_members,
+        cluster=cluster,
+        speed=speed,
+        same_proc=same_proc,
+        n_procs=n_procs,
+    )
 
-    # 1. steady-state executor tuple rates (tuples/sec)
-    w_full = jnp.zeros(n).at[jnp.asarray(params.spout_ids)].set(w)
-    lam = jnp.asarray(params.flow_solve) @ w_full                     # [N]
 
-    # edge tuple rates; machine / process locality masks
-    same_mach = X @ X.T                                               # [N, N]
-    if same_proc is None:
-        same_proc = same_mach
-    else:
-        same_proc = same_proc * same_mach   # same process => same machine
-    edge_rate = lam[:, None] * R                                      # tuples/s
-    cross_proc = edge_rate * (1.0 - same_proc)       # pays ser/deser CPU
-    cross_mach = edge_rate * (1.0 - same_mach)       # additionally uses NIC
+def average_tuple_time_from_params(
+    X: jnp.ndarray,
+    w: jnp.ndarray,
+    env_params: EnvParams,
+    sim: SimParams,
+    cluster: ClusterSpec,
+    speed: jnp.ndarray | None = None,
+    same_proc: jnp.ndarray | None = None,
+    n_procs: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """``average_tuple_time_ms`` with the numeric arrays taken from a traced
+    EnvParams pytree (structure still from the static SimParams) — the
+    functional-core path that makes scenario fleets vmappable."""
+    speed = env_params.speed if speed is None else speed
+    return _latency_core(
+        X, w,
+        routing=env_params.routing,
+        flow_solve=env_params.flow_solve,
+        service_ms=env_params.service_ms,
+        tuple_bytes=env_params.tuple_bytes,
+        acker_ms=env_params.acker_ms,
+        spout_ids=sim.spout_ids,
+        exec_component=sim.exec_component,
+        n_components=int(sim.exec_component.max()) + 1,
+        rev_schedule=sim.rev_schedule,
+        comp_members=sim.comp_members,
+        cluster=cluster,
+        speed=speed,
+        same_proc=same_proc,
+        n_procs=n_procs,
+    )
 
-    # 2. machine CPU contention.  Demand = executor service + ser/deser CPU
-    # for every inter-process tuple (the traffic-awareness mechanism that
-    # T-Storm [52] and [25] exploit: remote transfers burn CPU on both ends).
-    c_ms = jnp.asarray(params.service_ms)                             # [N]
-    ser_ms = cluster.ser_base_ms + \
-        jnp.asarray(params.tuple_bytes) * cluster.ser_ms_per_kb / 1024.0  # [N]
-    base_demand = (X * (lam * c_ms / 1e3)[:, None]).sum(0)            # [M]
-    ser_out = (X * (cross_proc.sum(1) * ser_ms / 1e3)[:, None]).sum(0)
-    ser_in = (X * ((cross_proc * ser_ms[:, None]).sum(0) / 1e3)[:, None]).sum(0)
-    if n_procs is None:
-        # paper's schedulers: one worker process per (used) machine
-        n_procs = (X.sum(0) > 0).astype(jnp.float32)
-    proc_burn = n_procs * cluster.proc_overhead_cores                 # cores
-    # cross-component mixing interference (see ClusterSpec.mix_penalty)
-    comp_onehot = jax.nn.one_hot(jnp.asarray(params.exec_component),
-                                 int(params.exec_component.max()) + 1)
-    presence = jnp.clip(comp_onehot.T @ X, 0.0, 1.0)                  # [C, M]
-    n_comp = presence.sum(0)                                          # [M]
-    mix = 1.0 + cluster.mix_penalty * jnp.maximum(n_comp - 1.0, 0.0)
-    demand = (base_demand + ser_out + ser_in) * mix / speed + proc_burn
-    rho_cpu = demand / cluster.cores_per_machine
-    g_m = _congestion(rho_cpu)                                        # [M]
 
-    # 3. per-executor sojourn (service inflated by machine contention)
-    inflate = X @ (g_m / speed)                                       # [N]
-    s_eff = c_ms * inflate                                            # ms
-    rho_exec = lam * s_eff / 1e3
-    sojourn = s_eff * _congestion(rho_exec)                           # [N] ms
-
-    # 4. transfer delays: in-process queue < IPC < network (w/ NIC contention)
-    bytes_per_s = cross_mach * jnp.asarray(params.tuple_bytes)[:, None]
-    out_load = (X * bytes_per_s.sum(1)[:, None]).sum(0)               # [M] B/s
-    in_load = (X * bytes_per_s.sum(0)[:, None]).sum(0)                # [M] B/s
-    nic_cap = cluster.nic_bytes_per_ms * 1e3                          # B/s
-    rho_nic = jnp.maximum(out_load, in_load) / nic_cap
-    nic_g = _congestion(rho_nic)                                      # [M]
-    nic_factor = 0.5 * (X @ nic_g)[:, None] + 0.5 * (X @ nic_g)[None, :]
-    wire_ms = jnp.asarray(params.tuple_bytes)[:, None] / cluster.nic_bytes_per_ms
-    # ser/deser also adds *latency* on the tuple's own path when crossing
-    # process boundaries (it is in the critical path, not just CPU load):
-    # serialize at the source + deserialize at the destination.
-    ser_path = 2.0 * ser_ms[:, None]
-    d_edge = jnp.where(
-        same_proc > 0.5,
-        cluster.local_base_ms,
-        jnp.where(
-            same_mach > 0.5,
-            cluster.ipc_base_ms + ser_path,
-            cluster.net_base_ms + ser_path + wire_ms * nic_factor,
-        ),
-    )                                                                 # [N, N]
-
-    # 5. completion-time recursion, reverse topo order over components.
-    comp_of = params.exec_component
-    completion = sojourn  # leaves: just their own sojourn
-    for ci, downs in params.rev_schedule:
-        if not downs:
-            continue
-        src_ids = jnp.asarray(params.comp_members[ci])
-        branch_costs = []
-        for dc in downs:
-            dst_ids = jnp.asarray(params.comp_members[dc])
-            p = R[jnp.ix_(src_ids, dst_ids)]                          # [s, d]
-            p = p / jnp.maximum(p.sum(1, keepdims=True), 1e-12)
-            hop = d_edge[jnp.ix_(src_ids, dst_ids)] + completion[dst_ids][None, :]
-            branch_costs.append((p * hop).sum(1))                     # [s]
-        downstream = functools.reduce(jnp.maximum, branch_costs)
-        completion = completion.at[src_ids].add(downstream)
-
-    spout_ids = jnp.asarray(params.spout_ids)
-    w_safe = jnp.maximum(w, 0.0)
-    avg = (w_safe * completion[spout_ids]).sum() / jnp.maximum(w_safe.sum(), 1e-9)
-    return avg + params.acker_ms
+def measured_latency_from_params(
+    key: jax.Array,
+    X: jnp.ndarray,
+    w: jnp.ndarray,
+    env_params: EnvParams,
+    sim: SimParams,
+    cluster: ClusterSpec,
+    speed: jnp.ndarray | None = None,
+    n_measurements: int = 5,
+    same_proc: jnp.ndarray | None = None,
+    n_procs: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Noisy measurement of the EnvParams path: mean of ``n_measurements``
+    lognormal-perturbed readings with params.noise_sigma."""
+    base = average_tuple_time_from_params(X, w, env_params, sim, cluster,
+                                          speed=speed, same_proc=same_proc,
+                                          n_procs=n_procs)
+    z = jax.random.normal(key, (n_measurements,)) * env_params.noise_sigma
+    return (base * jnp.exp(z)).mean()
 
 
 def measured_latency_ms(

@@ -1,13 +1,46 @@
 """Workload (spout arrival-rate) processes.
 
 The state in the paper is (X, w) where w is the tuple arrival rate of each
-data source; adaptivity to w is a headline feature (Fig 12: +50% shift)."""
+data source; adaptivity to w is a headline feature (Fig 12: +50% shift).
+
+Two surfaces:
+
+  * ``WorkloadProcess`` — the declarative spec (hashable frozen dataclass,
+    part of the SchedulingEnv static spec);
+  * ``step_rates`` — the pure transition function the functional env API
+    drives with rate parameters taken from an ``EnvParams`` pytree, so a
+    fleet of lanes can carry *different* base rates / jitter / shift
+    schedules through one vmapped program."""
 from __future__ import annotations
 
 import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+# Sentinel "never shifts" epoch for the traced shift schedule: the paper's
+# Fig 12 step change is expressed as `epoch >= shift_epoch`, so an epoch no
+# run ever reaches disables it without a Python-level branch.
+NEVER_SHIFT: int = 2 ** 30
+
+
+def step_rates(
+    key: jax.Array,
+    w: jnp.ndarray,
+    epoch: jnp.ndarray,
+    base_rates: jnp.ndarray,
+    jitter: jnp.ndarray,
+    revert: jnp.ndarray,
+    shift_epoch: jnp.ndarray = NEVER_SHIFT,
+    shift_factor: jnp.ndarray = 1.5,
+) -> jnp.ndarray:
+    """One epoch of the mean-reverting multiplicative random walk, with all
+    rate parameters as (traceable, vmappable) arguments."""
+    base = jnp.where(epoch >= shift_epoch, base_rates * shift_factor,
+                     base_rates)
+    z = jax.random.normal(key, w.shape) * jitter
+    target = base * jnp.exp(z)
+    return w + revert * (target - w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,12 +62,9 @@ class WorkloadProcess:
         return jnp.asarray(self.base_rates)
 
     def step(self, key: jax.Array, w: jnp.ndarray, epoch: jnp.ndarray) -> jnp.ndarray:
-        base = jnp.asarray(self.base_rates)
-        if self.shift_epoch is not None:
-            base = jnp.where(epoch >= self.shift_epoch, base * self.shift_factor, base)
-        z = jax.random.normal(key, w.shape) * self.jitter
-        target = base * jnp.exp(z)
-        return w + self.revert * (target - w)
+        shift = self.shift_epoch if self.shift_epoch is not None else NEVER_SHIFT
+        return step_rates(key, w, epoch, jnp.asarray(self.base_rates),
+                          self.jitter, self.revert, shift, self.shift_factor)
 
 
 def constant(rates: tuple[float, ...]) -> WorkloadProcess:

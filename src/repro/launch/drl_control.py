@@ -1,13 +1,18 @@
-"""The paper's control loop as a launcher: train the DRL scheduler on a
+"""The paper's control loop as a launcher: train a registry agent on a
 DSDPS topology (or the TPU expert-placement env) and report the schedule.
 
-Online learning runs as a FLEET: ``--fleet N`` independent seeds execute
+Online learning runs as a FLEET: ``--fleet N`` independent lanes execute
 in one jitted, vmapped scan (core/agent.run_online_fleet) and the final
-latency is reported as mean ± std across seeds, with the best lane's
-assignment printed.
+latency is reported as mean ± std across lanes, with the best lane's
+assignment printed.  ``--agent`` picks any registered control policy
+(core.api.make_agent) and ``--scenario`` swaps the pure seed sweep for a
+named heterogeneous EnvParams fleet (repro.dsdps.scenarios) — per-lane
+workload rates / stragglers / noise in the same single program.
 
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
       --offline 2000 --epochs 300 --fleet 8
+  PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
+      --agent dqn --scenario one_slow_machine --fleet 4
   PYTHONPATH=src python -m repro.launch.drl_control --app placement
 """
 from __future__ import annotations
@@ -18,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DDPGConfig, jamba_placement_env, run_online_fleet
+from repro.core import (agent_names, jamba_placement_env, make_agent,
+                        run_online_fleet)
 from repro.core import ddpg as ddpg_lib
-from repro.dsdps import SchedulingEnv, apps
+from repro.dsdps import SchedulingEnv, apps, scenarios
 from repro.dsdps.apps import default_workload
 
 
@@ -35,50 +41,85 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="cq_small",
                     choices=list(apps.ALL_APPS) + ["placement"])
+    ap.add_argument("--agent", default="ddpg", choices=list(agent_names()),
+                    help="registered control policy (core.api.make_agent)")
+    ap.add_argument("--scenario", default=None,
+                    choices=list(scenarios.SCENARIOS),
+                    help="heterogeneous EnvParams fleet instead of a pure "
+                         "seed sweep (DSDPS apps only)")
     ap.add_argument("--offline", type=int, default=2000,
-                    help="offline random-action samples (paper: 10,000)")
+                    help="offline random-action samples (paper: 10,000; "
+                         "ddpg only)")
     ap.add_argument("--offline-updates", type=int, default=500)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--fleet", type=int, default=4,
-                    help="independent online-learning seeds, batched in one "
+                    help="independent online-learning lanes, batched in one "
                          "XLA program")
     ap.add_argument("--k", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.fleet < 1:
         ap.error("--fleet must be >= 1")
+    if args.scenario and args.app == "placement":
+        ap.error("--scenario applies to DSDPS apps, not placement")
+    if args.agent == "model_based" and args.app == "placement":
+        ap.error("model_based profiles a DSDPS cluster; use it with the "
+                 "Storm apps")
 
     env = build_env(args.app)
-    cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
-                     state_dim=env.state_dim, k_nn=args.k)
+    overrides = {"k_nn": args.k} if args.agent == "ddpg" else {}
+    agent = make_agent(args.agent, env, **overrides)
     key = jax.random.PRNGKey(args.seed)
-    states = ddpg_lib.init_fleet(key, cfg, args.fleet)
+    states = agent.init_fleet(key, args.fleet)
+    env_params = (scenarios.build(args.scenario, env, args.fleet)
+                  if args.scenario else None)
 
-    print(f"offline pretraining {args.fleet} lanes on {args.offline} "
-          f"random transitions each ...")
-    states = ddpg_lib.offline_pretrain_fleet(
-        jax.random.split(jax.random.fold_in(key, 1), args.fleet),
-        states, cfg, env,
-        n_samples=args.offline, n_updates=args.offline_updates)
+    if args.agent == "ddpg" and args.offline > 0:
+        print(f"offline pretraining {args.fleet} lanes on {args.offline} "
+              f"random transitions each ...")
+        states = ddpg_lib.offline_pretrain_fleet(
+            jax.random.split(jax.random.fold_in(key, 1), args.fleet),
+            states, agent.cfg, env,
+            n_samples=args.offline, n_updates=args.offline_updates,
+            env_params=env_params)
 
-    print(f"online learning: fleet of {args.fleet} x {args.epochs} decision "
-          f"epochs in one batched scan ...")
+    scen = f" ({args.scenario} scenario fleet)" if args.scenario else ""
+    print(f"online learning: {args.agent} fleet of {args.fleet} x "
+          f"{args.epochs} decision epochs in one batched scan{scen} ...")
     states, hist = run_online_fleet(
         jax.random.split(jax.random.fold_in(key, 2), args.fleet),
-        env, cfg, states, T=args.epochs)
+        env, agent, states, T=args.epochs, env_params=env_params)
 
-    w = (env.workload.init() if hasattr(env, "workload")
-         else env._base_load)
-    finals = np.asarray([
-        float(env.evaluate(jnp.asarray(hist.final_assignment[f]), w))
-        for f in range(args.fleet)])
-    rr = float(env.evaluate(env.round_robin_assignment(), w))
-    best = int(finals.argmin())
+    # score every lane under the scenario it actually ran (round-robin too,
+    # so the improvement column compares like with like per lane)
+    finals, rrs = [], []
+    X_rr = env.round_robin_assignment()
+    for f in range(args.fleet):
+        if env_params is not None:
+            lane_p = jax.tree.map(lambda x: x[f], env_params)
+            w_f = lane_p.base_rates
+        else:
+            lane_p = None
+            w_f = (env.workload.init() if hasattr(env, "workload")
+                   else env._base_load)
+        X_f = jnp.asarray(hist.final_assignment[f])
+        finals.append(float(env.evaluate(X_f, w_f, params=lane_p)
+                            if lane_p is not None
+                            else env.evaluate(X_f, w_f)))
+        rrs.append(float(env.evaluate(X_rr, w_f, params=lane_p)
+                         if lane_p is not None
+                         else env.evaluate(X_rr, w_f)))
+    finals, rrs = np.asarray(finals), np.asarray(rrs)
+    # "best" is the lane with the largest improvement over ITS round-robin
+    # score, so the printed latency, improvement, and assignment agree even
+    # when lanes run heterogeneous scenarios
+    best = int((finals / rrs).argmin())
     print(f"\nfinal latency {finals.mean():.3f} ± {finals.std():.3f} ms "
-          f"over {args.fleet} seeds (best {finals.min():.3f} ms)   "
-          f"round-robin {rr:.3f} ms   "
-          f"improvement {1 - finals.mean() / rr:.1%} mean / "
-          f"{1 - finals.min() / rr:.1%} best")
+          f"over {args.fleet} lanes "
+          f"(best lane {best}: {finals[best]:.3f} ms)   "
+          f"round-robin {rrs.mean():.3f} ms   "
+          f"improvement {1 - finals.mean() / rrs.mean():.1%} mean / "
+          f"{1 - finals[best] / rrs[best]:.1%} best")
     print("best assignment (executor -> machine):",
           hist.final_assignment[best].argmax(-1).tolist())
 

@@ -1,0 +1,250 @@
+"""Functional core API v1: EnvParams pytree, the Agent interface +
+registry, scenario fleets, and the params-vmapped fleet runner.
+
+The contract under test: (a) the functional runner reproduces the legacy
+per-epoch Python oracles, (b) a heterogeneous-scenario fleet lane i is
+bit-identical to a single run built from params lane i, (c) every
+registered agent runs end-to-end through the same runner, and (d) the
+id(env)-keyed runner cache is gone."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.agent as agent_mod
+from repro.core import (DDPGConfig, DQNConfig, agent_names, ddpg_init,
+                        make_agent, run_online_agent, run_online_ddpg,
+                        run_online_ddpg_python, run_online_dqn,
+                        run_online_dqn_python, run_online_fleet)
+from repro.core import ddpg, dqn
+from repro.core.agent import History
+from repro.dsdps import (SchedulingEnv, apps, perturb_service, scale_rates,
+                         scenarios, stack_env_params, with_noise_sigma,
+                         with_straggler)
+from repro.dsdps.apps import default_workload
+
+
+@pytest.fixture(scope="module")
+def small_env():
+    topo = apps.continuous_queries("small")
+    return SchedulingEnv(topo, default_workload(topo))
+
+
+@pytest.fixture(scope="module")
+def ddpg_cfg(small_env):
+    return DDPGConfig(n_executors=small_env.N, n_machines=small_env.M,
+                      state_dim=small_env.state_dim, k_nn=4)
+
+
+# --------------------------------------------------------------------------
+# EnvParams pytree + functional env surface
+# --------------------------------------------------------------------------
+def test_default_params_is_jnp_pytree(small_env):
+    p = small_env.default_params()
+    leaves = jax.tree_util.tree_leaves(p)
+    assert leaves, "EnvParams must be a non-empty pytree"
+    for leaf in leaves:
+        assert isinstance(leaf, jnp.ndarray)
+    # stacking (the scenario-fleet representation) keeps the structure
+    stacked = stack_env_params([p, with_straggler(p, 0, 0.5)])
+    assert stacked.speed.shape == (2, small_env.M)
+    assert stacked.noise_sigma.shape == (2,)
+
+
+def test_explicit_params_match_implicit_defaults(small_env):
+    """reset/step/state_vector with params=default_params() must be
+    bit-identical to the implicit-default calls (the compat contract)."""
+    env = small_env
+    p = env.default_params()
+    key = jax.random.PRNGKey(0)
+    s_a = env.reset(key)
+    s_b = env.reset(key, p)
+    for a, b in zip(s_a, s_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(env.state_vector(s_a)),
+                                  np.asarray(env.state_vector(s_a, p)))
+    out_a = env.step(key, s_a, s_a.X)
+    out_b = env.step(key, s_a, s_a.X, p)
+    np.testing.assert_array_equal(np.asarray(out_a.latency_ms),
+                                  np.asarray(out_b.latency_ms))
+    np.testing.assert_array_equal(np.asarray(env.evaluate(s_a.X, s_a.w)),
+                                  np.asarray(env.evaluate(s_a.X, s_a.w,
+                                                          params=p)))
+
+
+def test_perturbation_helpers(small_env):
+    env = small_env
+    p = env.default_params()
+    w = p.base_rates
+    X = env.round_robin_assignment()
+    base = float(env.evaluate(X, w, params=p))
+    slow = float(env.evaluate(X, w, params=with_straggler(p, 0, 0.3)))
+    assert slow > base
+    p_svc = perturb_service(p, jax.random.PRNGKey(1), sigma=0.3)
+    assert not np.allclose(np.asarray(p_svc.service_ms),
+                           np.asarray(p.service_ms))
+    p_rate = scale_rates(p, 1.5)
+    np.testing.assert_allclose(np.asarray(p_rate.base_rates),
+                               np.asarray(p.base_rates) * 1.5, rtol=1e-6)
+    assert float(with_noise_sigma(p, 0.2).noise_sigma) == pytest.approx(0.2)
+
+
+# --------------------------------------------------------------------------
+# Functional runner vs the legacy Python oracles
+# --------------------------------------------------------------------------
+def test_agent_runner_reproduces_python_oracle_ddpg(small_env, ddpg_cfg):
+    env, cfg = small_env, ddpg_cfg
+    state = ddpg.init_state(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(7)
+    _, h_py = run_online_ddpg_python(key, env, cfg, state, T=10,
+                                     updates_per_epoch=2)
+    agent = make_agent("ddpg", env, cfg=cfg)
+    _, h_fn = run_online_agent(key, env, agent, state, T=10,
+                               updates_per_epoch=2)
+    np.testing.assert_allclose(h_fn.rewards, h_py.rewards,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(h_fn.moved, h_py.moved)
+    np.testing.assert_array_equal(h_fn.final_assignment.argmax(-1),
+                                  h_py.final_assignment.argmax(-1))
+
+
+def test_agent_runner_reproduces_python_oracle_dqn(small_env):
+    env = small_env
+    cfg = DQNConfig(n_executors=env.N, n_machines=env.M,
+                    state_dim=env.state_dim)
+    state = dqn.init_state(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(5)
+    _, h_py = run_online_dqn_python(key, env, cfg, state, T=10)
+    agent = make_agent("dqn", env, cfg=cfg)
+    _, h_fn = run_online_agent(key, env, agent, state, T=10)
+    np.testing.assert_allclose(h_fn.rewards, h_py.rewards,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(h_fn.moved, h_py.moved)
+
+
+# --------------------------------------------------------------------------
+# Heterogeneous-scenario fleet: lane i == single run from params lane i
+# --------------------------------------------------------------------------
+def test_heterogeneous_fleet_matches_single_runs(small_env, ddpg_cfg):
+    env, cfg = small_env, ddpg_cfg
+    p = env.default_params()
+    lanes = [
+        p,                                            # nominal
+        with_straggler(p, 2, 0.3),                    # one slow machine
+        scale_rates(p, 1.4),                          # heavier workload
+        with_noise_sigma(perturb_service(
+            p, jax.random.PRNGKey(3), 0.2), 0.1),     # jittery + noisy
+    ]
+    params = stack_env_params(lanes)
+    F, T = len(lanes), 8
+    states = ddpg.init_fleet(jax.random.PRNGKey(1), cfg, F)
+    keys = jax.random.split(jax.random.PRNGKey(2), F)
+    _, h_fleet = run_online_fleet(keys, env, cfg, states, T=T,
+                                  env_params=params)
+    assert h_fleet.rewards.shape == (F, T)
+    for i in range(F):
+        st_i = jax.tree.map(lambda x: x[i], states)
+        _, h_i = run_online_ddpg(keys[i], env, cfg, st_i, T=T,
+                                 env_params=lanes[i])
+        np.testing.assert_array_equal(h_fleet.rewards[i], h_i.rewards)
+        np.testing.assert_array_equal(h_fleet.latencies[i], h_i.latencies)
+        np.testing.assert_array_equal(h_fleet.moved[i], h_i.moved)
+        np.testing.assert_array_equal(h_fleet.final_assignment[i],
+                                      h_i.final_assignment)
+    # the scenarios really differ: straggler lane must be slower, heavier
+    # workload lane must be slower than nominal
+    assert h_fleet.latencies[1].mean() > h_fleet.latencies[0].mean()
+    assert h_fleet.latencies[2].mean() > h_fleet.latencies[0].mean()
+
+
+def test_named_scenarios_build_and_differ(small_env):
+    env = small_env
+    F = 4
+    for name in scenarios.SCENARIOS:
+        params = scenarios.build(name, env, F)
+        assert params.base_rates.shape[0] == F, name
+        assert params.speed.shape == (F, env.M), name
+    slow = scenarios.build("one_slow_machine", env, F, factor=0.25)
+    # lane i slows machine i
+    sp = np.asarray(slow.speed)
+    for i in range(F):
+        assert sp[i, i % env.M] == pytest.approx(0.25)
+    with pytest.raises(KeyError):
+        scenarios.build("nope", env, F)
+
+
+# --------------------------------------------------------------------------
+# Registry: every agent runs end-to-end through the same fleet runner
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["ddpg", "dqn", "round_robin",
+                                  "model_based"])
+def test_registry_agent_runs_five_epochs(small_env, name):
+    env = small_env
+    overrides = {"model_based": {"fit_samples": 40},
+                 "ddpg": {"k_nn": 4}}.get(name, {})
+    agent = make_agent(name, env, **overrides)
+    assert agent.name == name
+    F = 2
+    states = agent.init_fleet(jax.random.PRNGKey(0), F)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    _, hist = run_online_fleet(keys, env, agent, states, T=5)
+    assert hist.rewards.shape == (F, 5)
+    assert np.isfinite(hist.rewards).all()
+
+
+def test_registry_lists_builtins_and_rejects_unknown(small_env):
+    names = agent_names()
+    for expected in ("ddpg", "dqn", "round_robin", "model_based"):
+        assert expected in names
+    with pytest.raises(KeyError):
+        make_agent("nope", small_env)
+
+
+def test_agents_with_equal_configs_are_equal(small_env, ddpg_cfg):
+    """Agent bundles must be value-equal for jit's static-arg cache to
+    replace the old id(env) runner cache."""
+    a = make_agent("ddpg", small_env, cfg=ddpg_cfg)
+    b = make_agent("ddpg", small_env, cfg=ddpg_cfg)
+    assert a == b and hash(a) == hash(b)
+
+
+def test_runner_cache_is_gone():
+    assert not hasattr(agent_mod, "_RUNNER_CACHE")
+    assert not hasattr(agent_mod, "_compiled_runner")
+
+
+# --------------------------------------------------------------------------
+# History.smoothed_rewards degrades gracefully without scipy
+# --------------------------------------------------------------------------
+def _noisy_history(T=120, fleet=3, seed=0):
+    rng = np.random.default_rng(seed)
+    r = np.cumsum(rng.normal(size=(fleet, T)), axis=-1)
+    return History(rewards=r, latencies=-r, moved=np.zeros_like(r),
+                   final_assignment=np.zeros((fleet, 4, 2)))
+
+
+def test_smoothed_rewards_numpy_fallback(monkeypatch):
+    hist = _noisy_history()
+    with_scipy = hist.smoothed_rewards()
+    monkeypatch.setitem(sys.modules, "scipy", None)
+    monkeypatch.setitem(sys.modules, "scipy.signal", None)
+    fallback = hist.smoothed_rewards()
+    assert fallback.shape == with_scipy.shape
+    assert np.isfinite(fallback).all()
+    # it actually smooths: epoch-to-epoch wiggle shrinks vs the raw curve
+    raw = hist.normalized_rewards()
+    assert np.abs(np.diff(fallback, axis=-1)).mean() < \
+        np.abs(np.diff(raw, axis=-1)).mean()
+    # and stays close to the scipy filtfilt result
+    assert np.abs(fallback - with_scipy).mean() < 0.1
+    mean, std = hist.seed_band()
+    assert mean.shape == (120,) and np.isfinite(std).all()
+
+
+def test_smoothed_rewards_fallback_short_series(monkeypatch):
+    monkeypatch.setitem(sys.modules, "scipy", None)
+    monkeypatch.setitem(sys.modules, "scipy.signal", None)
+    hist = _noisy_history(T=10)
+    assert hist.smoothed_rewards().shape == (3, 10)
