@@ -36,9 +36,17 @@ DEFAULT_JSON = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / \
     "fleet_bench.json"
 
 
+def _params_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
 def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
             baseline_epochs: int = 40,
-            scenario_batched: bool = False) -> list[tuple]:
+            scenario_batched: bool = False,
+            broadcast_invariant: bool = False) -> list[tuple]:
+    # the broadcast comparison is a variant OF the scenario-batched fleet
+    scenario_batched = scenario_batched or broadcast_invariant
     topo = apps.ALL_APPS[app]()
     env = SchedulingEnv(topo, default_workload(topo))
     cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
@@ -96,6 +104,27 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
                      f"vs_seed_only_fleet={eps_scen / eps_warm:.2f}x;"
                      f"speedup_vs_python={eps_scen / eps_python:.1f}x;"
                      f"cold_s={dt_cold:.2f}"))
+
+        if broadcast_invariant:
+            # same scenario fleet, but scenario-invariant leaves (routing /
+            # flow_solve / tuple_bytes) kept single-copy and broadcast with
+            # per-leaf in_axes=None — numerically identical to the stacked
+            # run, minus the F×-duplicated params memory
+            bc_params = scenarios.build("mixed", env, fleet,
+                                        broadcast_invariant=True)
+            run_online_fleet(keys, env, cfg, states, T=epochs,
+                             env_params=bc_params)   # compile
+            t0 = time.perf_counter()
+            run_online_fleet(keys, env, cfg, states, T=epochs,
+                             env_params=bc_params)
+            dt_bc = time.perf_counter() - t0
+            eps_bc = fleet * epochs / dt_bc
+            rows.append((f"fleet_bench_{app}_broadcast_f{fleet}_T{epochs}",
+                         dt_bc / (fleet * epochs) * 1e6,
+                         f"lane_epochs_per_sec={eps_bc:.1f};"
+                         f"vs_stacked_scenario={eps_bc / eps_scen:.2f}x;"
+                         f"params_bytes_stacked={_params_bytes(env_params)};"
+                         f"params_bytes_broadcast={_params_bytes(bc_params)}"))
     return rows
 
 
@@ -108,11 +137,17 @@ def main() -> None:
     ap.add_argument("--scenario-batched", action="store_true",
                     help="also time the params-vmapped heterogeneous-"
                          "scenario fleet (dsdps.scenarios 'mixed')")
+    ap.add_argument("--broadcast-invariant", action="store_true",
+                    help="also time the per-leaf broadcast variant of the "
+                         "scenario-batched fleet (invariant leaves "
+                         "single-copy, in_axes=None) and report stacked-vs-"
+                         "broadcast lane-epochs/sec + params memory "
+                         "(implies --scenario-batched)")
     ap.add_argument("--json", default=str(DEFAULT_JSON),
                     help="benchmark JSON artifact path ('' disables)")
     args = ap.parse_args()
     rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
-                   args.scenario_batched)
+                   args.scenario_batched, args.broadcast_invariant)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

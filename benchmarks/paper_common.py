@@ -18,19 +18,17 @@ import numpy as np
 from repro.core import ModelBasedScheduler, make_agent, run_online_fleet
 from repro.core import ddpg as ddpg_lib
 from repro.core import dqn as dqn_lib
-from repro.core.api import params_are_stacked
 from repro.core.exploration import EpsilonSchedule
-from repro.dsdps import SchedulingEnv, apps
+from repro.dsdps import SchedulingEnv, apps, lane_params
 from repro.dsdps.apps import default_workload
 
 
 def _lane_params(env, env_params, lane: int):
     """The EnvParams lane ``lane`` deploys under: lane ``lane`` of a stacked
-    scenario fleet, the shared params otherwise (default when None)."""
+    scenario fleet (broadcast-invariant stacks included), the shared params
+    otherwise (default when None)."""
     p = env.default_params() if env_params is None else env_params
-    if params_are_stacked(env, p):
-        return jax.tree.map(lambda x: x[lane], p)
-    return p
+    return lane_params(p, env.default_params(), lane)
 
 
 @dataclasses.dataclass

@@ -20,7 +20,7 @@ import numpy as np
 from benchmarks.paper_common import (Budget, make_env, run_actor_critic,
                                      run_model_based)
 from repro.core import run_online_fleet
-from repro.dsdps import SchedulingEnv, scale_rates
+from repro.dsdps import SchedulingEnv, scenarios
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "paper"
 
@@ -33,8 +33,9 @@ def run(app: str, budget: Budget, seed: int = 0,
     mb_lat0, Xmb = run_model_based(env, budget, seed)
 
     # shifted scenario: both methods adapt.  For the DRL fleet the shift is
-    # a traced-parameter change against the same env spec (no env rebuild).
-    shifted = scale_rates(env.default_params(), shift_factor)
+    # a traced-parameter change against the same env spec (no env rebuild);
+    # constructed through the named-scenario module like every other fleet.
+    shifted = scenarios.workload_shift(env, shift_factor)
     keys = jax.random.split(jax.random.PRNGKey(seed + 7), budget.n_seeds)
     states, hist = run_online_fleet(
         keys, env, cfg, states,

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import make_agent, run_online_fleet
-from repro.dsdps import SchedulingEnv, apps, scale_rates, scenarios
+from repro.dsdps import (SchedulingEnv, apps, lane_params, scale_rates,
+                         scenarios)
 from repro.dsdps.apps import default_workload
 
 
@@ -28,14 +29,19 @@ def main() -> None:
     ap.add_argument("--epochs", type=int, default=150)
     ap.add_argument("--scenario", default="mixed",
                     choices=list(scenarios.SCENARIOS))
+    ap.add_argument("--broadcast-invariant", action="store_true",
+                    help="share scenario-invariant params leaves across "
+                         "lanes (per-leaf in_axes=None broadcast)")
     args = ap.parse_args()
 
     topo = apps.continuous_queries("small")
     env = SchedulingEnv(topo, default_workload(topo))
     agent = make_agent("ddpg", env, k_nn=8)
 
-    params = scenarios.build(args.scenario, env, args.fleet)
-    states = agent.init_fleet(jax.random.PRNGKey(0), args.fleet)
+    params = scenarios.build(args.scenario, env, args.fleet,
+                             broadcast_invariant=args.broadcast_invariant)
+    states = agent.init_fleet(jax.random.PRNGKey(0), args.fleet,
+                              env_params=params, env=env)
     keys = jax.random.split(jax.random.PRNGKey(1), args.fleet)
 
     print(f"training {args.fleet} heterogeneous '{args.scenario}' lanes x "
@@ -48,7 +54,7 @@ def main() -> None:
           f"(incl. compile)\n")
     print("lane  mean-latency(ms)  final-latency(ms)")
     for f in range(args.fleet):
-        lane_p = jax.tree.map(lambda x: x[f], params)
+        lane_p = lane_params(params, env.default_params(), f)
         final = float(env.evaluate(jnp.asarray(hist.final_assignment[f]),
                                    lane_p.base_rates, params=lane_p))
         print(f"  {f:2d}  {hist.latencies[f].mean():16.3f}  {final:17.3f}")

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ddpg, dqn
-from repro.core.api import Agent, make_epoch_step, params_are_stacked
+from repro.core.api import Agent, make_epoch_step
 from repro.core.ddpg import DDPGConfig, DDPGState
 from repro.core.dqn import DQNConfig, DQNState
 
@@ -152,10 +152,15 @@ def _single_program(key, state, env_state, env_params, *, env, agent: Agent,
 
 @partial(jax.jit,
          static_argnames=("env", "agent", "T", "updates_per_epoch", "explore",
-                          "stacked_params"))
+                          "params_axes"))
 def _fleet_program(keys, states, env_states, env_params, *, env, agent: Agent,
                    T: int, updates_per_epoch: int, explore: bool,
-                   stacked_params: bool):
+                   params_axes):
+    """``params_axes`` is the per-leaf vmap axis spec for ``env_params``
+    (simulator.params_in_axes): an EnvParams-shaped pytree of 0/None —
+    scenario-invariant leaves broadcast with None instead of being stacked
+    F× — or plain None when every lane shares one scenario.  It is a
+    hashable NamedTuple of ints/None, so it rides jit as a static arg."""
     def lane(key, state, env_state, lane_params):
         epoch = make_epoch_step(env, agent, env_params=lane_params,
                                 updates_per_epoch=updates_per_epoch,
@@ -164,7 +169,7 @@ def _fleet_program(keys, states, env_states, env_params, *, env, agent: Agent,
             epoch, (state, env_state, key), None, length=T)
         return state, rewards, lats, moved, env_state.X
 
-    in_axes = (0, 0, 0, 0 if stacked_params else None)
+    in_axes = (0, 0, 0, params_axes)
     return jax.vmap(lane, in_axes=in_axes)(keys, states, env_states,
                                            env_params)
 
@@ -256,6 +261,12 @@ def run_online_fleet(
                  repro.dsdps.scenarios): heterogeneous workload rates,
                  service-time jitter, noise levels, and stragglers then run
                  as one vmapped program.  Defaults to env.default_params().
+                 Stacks built with ``stack_env_params(...,
+                 broadcast_invariant=True)`` keep scenario-invariant leaves
+                 (routing / flow_solve / tuple_bytes) as ONE copy; those
+                 leaves ride the vmap with per-leaf ``in_axes=None`` —
+                 numerically identical to the fully-stacked run, minus the
+                 duplicated memory and batched-matmul FLOPs.
     ``env_states`` — optional stacked EnvState (SchedulingEnv.reset_fleet)
                  for heterogeneous *initial state* lanes: per-lane straggler
                  speed factors, initial assignments, warm workload states.
@@ -269,20 +280,22 @@ def run_online_fleet(
     keys = jnp.asarray(keys)
     if env_params is None:
         env_params = env.default_params()
-        stacked = False
+        params_axes = None
     else:
-        stacked = params_are_stacked(env, env_params)
+        from repro.dsdps.simulator import params_in_axes
+        params_axes = params_in_axes(env_params, env.default_params())
     if env_states is None:
         pairs = jax.vmap(jax.random.split)(keys)          # [F, 2] keys
         k_env, keys = pairs[:, 0], pairs[:, 1]
-        if stacked:
-            env_states = jax.vmap(env.reset)(k_env, env_params)
+        if params_axes is not None:
+            env_states = jax.vmap(env.reset, in_axes=(0, params_axes))(
+                k_env, env_params)
         else:
             env_states = jax.vmap(lambda k: env.reset(k, env_params))(k_env)
     states, rewards, lats, moved, X = _fleet_program(
         keys, states, env_states, env_params, env=env, agent=agent, T=int(T),
         updates_per_epoch=int(updates_per_epoch), explore=bool(explore),
-        stacked_params=bool(stacked))
+        params_axes=params_axes)
     return states, History(rewards=np.asarray(rewards),
                            latencies=np.asarray(lats),
                            moved=np.asarray(moved),

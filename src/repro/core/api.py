@@ -4,18 +4,24 @@ The paper's framework is explicitly pluggable: one DRL control loop driven
 against arbitrary applications and control policies.  An :class:`Agent` is
 an optax-style bundle of pure functions over a hashable config:
 
-    init     (key, cfg)                                   -> agent_state
-    select   (key, cfg, state, s_vec, env_state, explore) -> (action, aux)
+    init     (key, cfg, env_params)                       -> agent_state
+    select   (key, cfg, state, s_vec, env_state,
+              env_params, explore)                        -> (action, aux)
     observe  (cfg, state, s_vec, aux, reward, s_next)     -> agent_state
     update   (key, cfg, state)                            -> agent_state
     tick     (cfg, state)                                 -> agent_state
 
 ``aux`` is whatever the agent wants replayed (DDPG: the flat action; DQN:
-the move index; non-learning baselines: a dummy scalar).  Because the
-bundle holds module-level functions plus a hashable config, two agents
-built from equal configs compare equal — an Agent is a valid jit STATIC
-argument, and jit's own cache (keyed on the static env spec + agent)
-replaces the old id(env)-keyed runner cache.
+the move index; non-learning baselines: a dummy scalar).  ``env_params``
+is the scenario the agent is actually controlling (an EnvParams /
+PlacementParams pytree, or None for the env's defaults): learning agents
+may ignore it, but model-grounded baselines MUST consult it — a
+model-based lane in a heterogeneous straggler fleet has to profile and
+search ITS cluster, not the nominal one.  Because the bundle holds
+module-level functions plus a hashable config, two agents built from
+equal configs compare equal — an Agent is a valid jit STATIC argument,
+and jit's own cache (keyed on the static env spec + agent) replaces the
+old id(env)-keyed runner cache.
 
 :func:`make_epoch_step` fuses select → env.step → observe → update×U →
 tick into one scan body for ANY agent, against the functional env surface
@@ -56,15 +62,41 @@ class Agent(NamedTuple):
     tick_fn: Callable[[Any, Any], Any]
 
     # -- curried convenience surface ---------------------------------------
-    def init(self, key: jax.Array):
-        return self.init_fn(key, self.cfg)
+    def init(self, key: jax.Array, env_params=None):
+        return self.init_fn(key, self.cfg, env_params)
 
-    def init_fleet(self, key: jax.Array, fleet: int):
-        """Independently-initialized per-lane states stacked on [fleet]."""
-        return jax.vmap(self.init)(jax.random.split(key, fleet))
+    def init_fleet(self, key: jax.Array, fleet: int, env_params=None,
+                   env=None):
+        """Independently-initialized per-lane states stacked on [fleet].
 
-    def select(self, key, state, s_vec, env_state, explore: bool = True):
-        return self.select_fn(key, self.cfg, state, s_vec, env_state, explore)
+        ``env_params`` may be None, a single scenario shared by every lane,
+        or a STACKED scenario fleet ([F] leading axis, possibly with
+        broadcast-invariant leaves) — each lane then initializes under its
+        own scenario (e.g. the model-based baseline profiles and fits ITS
+        cluster, so a straggler lane learns a straggler model).  ``env`` is
+        required alongside ``env_params``: its ``default_params()``
+        supplies the single-scenario leaf ranks, without which a stacked
+        fleet is indistinguishable from a single scenario (and would be
+        fed whole to every lane)."""
+        keys = jax.random.split(key, fleet)
+        if env_params is not None:
+            if env is None:
+                raise ValueError(
+                    "init_fleet(env_params=...) needs env= as well — the "
+                    "env's default_params() is the reference that tells a "
+                    "stacked scenario fleet apart from a single scenario")
+            from repro.dsdps.simulator import params_in_axes
+            axes = params_in_axes(env_params, env.default_params())
+            if axes is not None:
+                return jax.vmap(
+                    lambda k, p: self.init_fn(k, self.cfg, p),
+                    in_axes=(0, axes))(keys, env_params)
+        return jax.vmap(lambda k: self.init_fn(k, self.cfg, env_params))(keys)
+
+    def select(self, key, state, s_vec, env_state, env_params=None,
+               explore: bool = True):
+        return self.select_fn(key, self.cfg, state, s_vec, env_state,
+                              env_params, explore)
 
     def observe(self, state, s_vec, aux, reward, s_next):
         return self.observe_fn(self.cfg, state, s_vec, aux, reward, s_next)
@@ -99,7 +131,7 @@ def make_epoch_step(env, agent: Agent, env_params=None,
         key, k_act, k_step, k_upd = jax.random.split(key, 4)
         s_vec = env.state_vector(env_state, params)
         action, aux = agent.select_fn(k_act, agent.cfg, state, s_vec,
-                                      env_state, explore)
+                                      env_state, params, explore)
         out = env.step(k_step, env_state, action, params)
         s_next = env.state_vector(out.state, params)
         state = agent.observe_fn(agent.cfg, state, s_vec, aux, out.reward,

@@ -40,6 +40,10 @@ class DDPGConfig:
     # optimal policy) keeps critic targets O(1) for stable training
     reward_scale: float = 0.25
     eps: EpsilonSchedule = EpsilonSchedule()
+    # route the K-NN projection's top-2/regret reduction through the Pallas
+    # kernel (kernels/knn_topk): compiled on TPU, interpret-mode fallback on
+    # CPU — flips the select/target hot path onto the kernels layer
+    use_pallas_knn: bool = False
 
     @property
     def action_dim(self) -> int:
@@ -109,7 +113,7 @@ def select_action(
     if exact_host_knn:
         cands = jnp.asarray(knn_actions_exact(np.asarray(proto), k))
     else:
-        cands = knn_actions_jax(proto, k)
+        cands = knn_actions_jax(proto, k, use_pallas=cfg.use_pallas_knn)
     q = jax.vmap(
         lambda a: nets.apply_critic(state.critic, s_vec, a.reshape(-1))
     )(cands)
@@ -130,7 +134,8 @@ def _target_values(state: DDPGState, cfg: DDPGConfig, r, s_next):
     def per_sample(sv):
         proto = nets.apply_actor(state.target_actor, sv).reshape(
             cfg.n_executors, cfg.n_machines)
-        cands = knn_actions_jax(proto, cfg.k_nn)
+        cands = knn_actions_jax(proto, cfg.k_nn,
+                                use_pallas=cfg.use_pallas_knn)
         q = jax.vmap(
             lambda a: nets.apply_critic(state.target_critic, sv, a.reshape(-1))
         )(cands)
@@ -203,7 +208,12 @@ def tick(state: DDPGState) -> DDPGState:
 # standardization statistics (r_mean/r_var/r_count) live in DDPGState and
 # therefore ride the scan carry automatically.
 # --------------------------------------------------------------------------
-def _agent_select(key, cfg: DDPGConfig, state, s_vec, env_state, explore):
+def _agent_init(key, cfg: DDPGConfig, env_params=None):
+    return init_state(key, cfg)
+
+
+def _agent_select(key, cfg: DDPGConfig, state, s_vec, env_state, env_params,
+                  explore):
     a = select_action(key, state, cfg, s_vec, explore=explore,
                       exact_host_knn=False)
     return a, a.reshape(-1)
@@ -225,7 +235,7 @@ def _agent_tick(cfg: DDPGConfig, state):
 
 def as_agent(cfg: DDPGConfig) -> api.Agent:
     """The actor-critic method as a pluggable Agent bundle."""
-    return api.Agent(name="ddpg", cfg=cfg, init_fn=init_state,
+    return api.Agent(name="ddpg", cfg=cfg, init_fn=_agent_init,
                      select_fn=_agent_select, observe_fn=_agent_observe,
                      update_fn=_agent_update, tick_fn=_agent_tick)
 
@@ -269,14 +279,19 @@ def offline_pretrain_fleet(
     """vmap of offline_pretrain over stacked lanes: every lane collects its
     own random-action transitions and pretrains its own nets, all in one
     XLA program.  ``env_params`` may be a single EnvParams or a stacked
-    scenario fleet (each lane then pretrains under its own scenario)."""
-    if env_params is not None and api.params_are_stacked(env, env_params):
-        return jax.vmap(
-            lambda k, s, p: offline_pretrain(k, s, cfg, env,
-                                             n_samples=n_samples,
-                                             n_updates=n_updates,
-                                             env_params=p)
-        )(keys, states, env_params)
+    scenario fleet (each lane then pretrains under its own scenario;
+    per-leaf broadcast stacks ride with in_axes=None on shared leaves)."""
+    if env_params is not None:
+        from repro.dsdps.simulator import params_in_axes
+        axes = params_in_axes(env_params, env.default_params())
+        if axes is not None:
+            return jax.vmap(
+                lambda k, s, p: offline_pretrain(k, s, cfg, env,
+                                                 n_samples=n_samples,
+                                                 n_updates=n_updates,
+                                                 env_params=p),
+                in_axes=(0, 0, axes)
+            )(keys, states, env_params)
     return jax.vmap(
         lambda k, s: offline_pretrain(k, s, cfg, env,
                                       n_samples=n_samples,

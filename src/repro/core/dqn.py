@@ -120,7 +120,12 @@ def tick(state: DQNState) -> DQNState:
 # Agent-interface adapter (mirrors ddpg's) — the DQN hooks of the generic
 # fused epoch body in api.make_epoch_step.
 # --------------------------------------------------------------------------
-def _agent_select(key, cfg: DQNConfig, state, s_vec, env_state, explore):
+def _agent_init(key, cfg: DQNConfig, env_params=None):
+    return init_state(key, cfg)
+
+
+def _agent_select(key, cfg: DQNConfig, state, s_vec, env_state, env_params,
+                  explore):
     move = select_move(key, state, cfg, s_vec, explore=explore)
     return apply_move(env_state.X, move, cfg.n_machines), move
 
@@ -141,7 +146,7 @@ def _agent_tick(cfg: DQNConfig, state):
 
 def as_agent(cfg: DQNConfig) -> api.Agent:
     """The DQN baseline as a pluggable Agent bundle."""
-    return api.Agent(name="dqn", cfg=cfg, init_fn=init_state,
+    return api.Agent(name="dqn", cfg=cfg, init_fn=_agent_init,
                      select_fn=_agent_select, observe_fn=_agent_observe,
                      update_fn=_agent_update, tick_fn=_agent_tick)
 

@@ -84,17 +84,33 @@ def knn_actions_exact(proto: np.ndarray, k: int) -> np.ndarray:
 # this recovers the exact top-K with overwhelming probability (tests check
 # equality against the host path); by construction it always contains the
 # exact 1-NN and only feasible actions.
+#
+# ``use_pallas=True`` computes the per-row top-2/regret reduction with the
+# kernels-layer Pallas kernel (kernels/knn_topk) instead of lax.top_k —
+# compiled on TPU, interpret-mode everywhere else (automatic fallback) —
+# so the DDPG select hot path exercises the kernel.
 # --------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("k", "pair_pool", "triple_pool"))
+def _row_top2(proto: jnp.ndarray, use_pallas: bool):
+    """(best_col [N] i32, second_col [N] i32, flip_regret [N] f32)."""
+    if use_pallas:
+        from repro.kernels.knn_topk import row_top2_regret
+        return row_top2_regret(
+            proto, interpret=jax.default_backend() != "tpu")
+    top2_vals, top2_idx = jax.lax.top_k(proto, 2)         # [N, 2]
+    flip_regret = 2.0 * (top2_vals[:, 0] - top2_vals[:, 1])   # [N]
+    return top2_idx[:, 0], top2_idx[:, 1], flip_regret
+
+
+@partial(jax.jit,
+         static_argnames=("k", "pair_pool", "triple_pool", "use_pallas"))
 def knn_actions_jax(
-    proto: jnp.ndarray, k: int, pair_pool: int = 8, triple_pool: int = 4
+    proto: jnp.ndarray, k: int, pair_pool: int = 8, triple_pool: int = 4,
+    use_pallas: bool = False,
 ) -> jnp.ndarray:
     """[k, N, M] one-hot candidate actions, ordered by distance to proto."""
     n, m = proto.shape
-    top2_vals, top2_idx = jax.lax.top_k(proto, 2)         # [N, 2]
-    best_col = top2_idx[:, 0]                             # [N]
-    # single-flip regrets to each row's 2nd-best column
-    flip_regret = 2.0 * (top2_vals[:, 0] - top2_vals[:, 1])   # [N]
+    # best / 2nd-best machine per row + single-flip regret to the 2nd-best
+    best_col, second_col, flip_regret = _row_top2(proto, use_pallas)
 
     pool = min(max(pair_pool, triple_pool, k), n)
     cheap_cost, cheap_rows = jax.lax.top_k(-flip_regret, pool)
@@ -126,7 +142,7 @@ def knn_actions_jax(
     def build(mask_row):
         # rows in `cheap_rows` flagged by mask flip to their 2nd-best column
         flip_full = jnp.zeros((n,), jnp.bool_).at[cheap_rows].set(mask_row)
-        cols = jnp.where(flip_full, top2_idx[:, 1], best_col)
+        cols = jnp.where(flip_full, second_col, best_col)
         return jax.nn.one_hot(cols, m, dtype=jnp.float32)
 
     actions = jax.vmap(build)(cand_masks[sel])            # [kk, N, M]

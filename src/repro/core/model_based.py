@@ -9,43 +9,57 @@ model's guidance.  We reproduce that architecture: a ridge regressor over
 hand-crafted per-machine load/traffic features (the information [25]
 collects from runtime statistics) + greedy move-based local search.  Its
 characteristic weakness — model bias: the feature model cannot represent
-every interaction in the real system — is exactly what the paper exploits."""
+every interaction in the real system — is exactly what the paper exploits.
+
+Everything here is EnvParams-aware: ``features`` / ``fit_theta`` /
+``predict`` / the sweep search all take the scenario the baseline actually
+controls (lane-correct machine speeds, service means, arrival rates, and
+measurement noise), defaulting to the env's nominal profile.  In a
+heterogeneous scenario fleet each model-based lane therefore profiles,
+fits, and searches ITS cluster — a straggler lane fits a straggler model —
+which is what makes the paper's latency comparison against [25] credible.
+The greedy local search is a single jitted ``lax.scan`` over executors ×
+``vmap`` over machines (no per-call re-jitting), so a fleet of model-based
+lanes searches in one XLA program."""
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import api
 from repro.dsdps.env import SchedulingEnv
-from repro.dsdps.simulator import measured_latency_ms
+from repro.dsdps.simulator import (EnvParams, measured_latency_from_params,
+                                   params_in_axes)
 
 
-def features(env: SchedulingEnv, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    """Per-machine load & traffic statistics visible to [25]'s collectors.
+def features(env: SchedulingEnv, X: jnp.ndarray, w: jnp.ndarray,
+             params: EnvParams | None = None) -> jnp.ndarray:
+    """Per-machine load & traffic statistics visible to [25]'s collectors,
+    computed from the scenario ``params`` actually in effect (the env's
+    nominal profile when None).
 
     Utilization is speed-adjusted: [25] measures *per-machine delays*, so
-    its model implicitly knows which machines are slow."""
-    p = env.params
+    its model implicitly knows which machines are slow — including the
+    lane's stragglers when ``params`` carries a perturbed speed vector."""
+    p = env.default_params() if params is None else params
     n = env.N
-    w_full = jnp.zeros(n).at[jnp.asarray(p.spout_ids)].set(w)
-    lam = jnp.asarray(p.flow_solve) @ w_full
+    w_full = jnp.zeros(n).at[jnp.asarray(env.params.spout_ids)].set(w)
+    lam = p.flow_solve @ w_full
     # component-level profiled means — the per-executor reality deviates
-    # (SimParams.service_ms), which is precisely the model bias the paper
+    # (EnvParams.service_ms), which is precisely the model bias the paper
     # exploits (§1: "prediction for each individual component may not be
     # accurate")
-    c_ms = jnp.asarray(p.nominal_service_ms)
+    c_ms = p.nominal_service_ms
     demand = (X * (lam * c_ms / 1e3)[:, None]).sum(0)          # [M]
     same = X @ X.T
-    bytes_per_s = (lam[:, None] * jnp.asarray(p.routing)) * \
-        jnp.asarray(p.tuple_bytes)[:, None]
+    bytes_per_s = (lam[:, None] * p.routing) * p.tuple_bytes[:, None]
     cross = bytes_per_s * (1.0 - same)
     out_load = (X * cross.sum(1)[:, None]).sum(0) / 1e8         # [M]
     in_load = (X * cross.sum(0)[:, None]).sum(0) / 1e8          # [M]
-    speed = jnp.asarray(env.cluster.speed_factors())
-    util = demand / (env.cluster.cores_per_machine * speed)
+    util = demand / (env.cluster.cores_per_machine * p.speed)
     feats = jnp.concatenate([
         util, util ** 2, util ** 3,
         out_load, in_load,
@@ -59,22 +73,34 @@ def features(env: SchedulingEnv, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return feats
 
 
+def predict_latency(env: SchedulingEnv, theta: jnp.ndarray, X: jnp.ndarray,
+                    w: jnp.ndarray,
+                    params: EnvParams | None = None) -> jnp.ndarray:
+    """The fitted model's end-to-end latency prediction for one schedule."""
+    f = jnp.concatenate([features(env, X, w, params), jnp.ones(1)])
+    return f @ theta
+
+
 def fit_theta(key: jax.Array, env: SchedulingEnv, n_samples: int = 400,
-              ridge_lambda: float = 1e-3) -> jnp.ndarray:
+              ridge_lambda: float = 1e-3,
+              params: EnvParams | None = None) -> jnp.ndarray:
     """Collect (random schedule, measured latency) pairs and fit the ridge
-    regressor — [25]'s offline profiling phase as one pure jax function
-    (jit/vmap-safe, so a fleet of model-based lanes can each fit its own
-    model in one program)."""
+    regressor — [25]'s offline profiling phase as one pure jax function.
+
+    Profiling measures the cluster described by ``params`` (speeds, true
+    service costs, arrival rates, telemetry noise), so a fleet of
+    model-based lanes can each fit its own scenario's model in one vmapped
+    program (jit/vmap-safe)."""
+    p = env.default_params() if params is None else params
     keys = jax.random.split(key, n_samples)
-    speed = jnp.asarray(env.cluster.speed_factors())
 
     def sample_one(k):
         k_a, k_n = jax.random.split(k)
         X = env.random_assignment(k_a)
-        w = env.workload.init()
-        y = measured_latency_ms(k_n, X, w, env.params, env.cluster,
-                                speed=speed, noise_sigma=env.noise_sigma)
-        return features(env, X, w), y
+        w = p.base_rates
+        y = measured_latency_from_params(k_n, X, w, p, env.params,
+                                         env.cluster)
+        return features(env, X, w, p), y
 
     F, Y = jax.vmap(sample_one)(keys)
     F = jnp.concatenate([F, jnp.ones((F.shape[0], 1))], axis=1)
@@ -82,55 +108,91 @@ def fit_theta(key: jax.Array, env: SchedulingEnv, n_samples: int = 400,
     return jnp.linalg.solve(A, F.T @ Y)
 
 
+# Module-level cached jit: `ModelBasedScheduler.fit` used to build a fresh
+# `jax.jit(fit_theta, ...)` wrapper inside the method — a retrace on every
+# call.  One wrapper, jit's own cache keyed on (env, n_samples).
+_fit_theta_jit = jax.jit(fit_theta, static_argnums=(1, 2))
+
+
+@partial(jax.jit, static_argnames=("env", "sweeps"))
+def sweep_schedule(X0: jnp.ndarray, w: jnp.ndarray, theta: jnp.ndarray,
+                   env: SchedulingEnv, params: EnvParams | None = None,
+                   sweeps: int = 3) -> jnp.ndarray:
+    """[25]'s model-guided greedy local search as ONE jitted program:
+    ``lax.scan`` over executors (each step re-places one executor at the
+    model's argmin machine), ``vmap`` over candidate machines, scanned over
+    ``sweeps`` passes.  Replaces the per-call-jitted Python sweeps×N loop —
+    repeated calls with the same (env, sweeps) never retrace, and the whole
+    search vmaps over a fleet of (X0, w, theta, params) lanes."""
+    m = env.M
+
+    def place_one(X, i):
+        def try_machine(j):
+            Xj = X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype))
+            return predict_latency(env, theta, Xj, w, params)
+
+        preds = jax.vmap(try_machine)(jnp.arange(m))
+        j = jnp.argmin(preds)
+        return X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype)), preds.min()
+
+    def one_sweep(X, _):
+        X, _ = jax.lax.scan(place_one, X, jnp.arange(env.N))
+        return X, None
+
+    X, _ = jax.lax.scan(one_sweep, X0, None, length=sweeps)
+    return X
+
+
+def sweep_schedule_fleet(X0s: jnp.ndarray, ws: jnp.ndarray,
+                         thetas: jnp.ndarray, env: SchedulingEnv,
+                         params: EnvParams, sweeps: int = 3) -> jnp.ndarray:
+    """A fleet of model-based searches in one XLA program: vmap of
+    :func:`sweep_schedule` over stacked (X0, w, theta) lanes and a stacked
+    (possibly broadcast-invariant) EnvParams scenario fleet."""
+    axes = params_in_axes(params, env.default_params())
+    return jax.vmap(
+        lambda X0, w, th, p: sweep_schedule(X0, w, th, env, p, sweeps),
+        in_axes=(0, 0, 0, axes))(X0s, ws, thetas, params)
+
+
 @dataclasses.dataclass
 class ModelBasedScheduler:
     env: SchedulingEnv
     ridge_lambda: float = 1e-3
     theta: jnp.ndarray | None = None
+    env_params: EnvParams | None = None   # scenario the baseline controls
+
+    def _params(self) -> EnvParams:
+        return (self.env.default_params() if self.env_params is None
+                else self.env_params)
 
     # -- model fitting ------------------------------------------------------
     def fit(self, key: jax.Array, n_samples: int = 400) -> "ModelBasedScheduler":
-        """Collect (random schedule, measured latency) pairs and fit ridge."""
-        self.theta = jax.jit(fit_theta, static_argnums=(1, 2))(
-            key, self.env, n_samples, self.ridge_lambda)
+        """Collect (random schedule, measured latency) pairs and fit ridge
+        under this scheduler's scenario params."""
+        self.theta = _fit_theta_jit(key, self.env, n_samples,
+                                    self.ridge_lambda, self._params())
         return self
 
     def predict(self, X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-        f = features(self.env, X, w)
-        f = jnp.concatenate([f, jnp.ones(1)])
-        return f @ self.theta
+        return predict_latency(self.env, self.theta, X, w, self._params())
 
     # -- model-guided greedy local search ------------------------------------
     def schedule(self, w: jnp.ndarray, X0: jnp.ndarray | None = None,
                  sweeps: int = 3) -> jnp.ndarray:
-        env = self.env
-        n, m = env.N, env.M
-        X = env.round_robin_assignment() if X0 is None else X0
-        theta = self.theta
-
-        @jax.jit
-        def best_move_for(X, i):
-            def try_machine(j):
-                Xj = X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype))
-                f = features(env, Xj, w)
-                f = jnp.concatenate([f, jnp.ones(1)])
-                return f @ theta
-            preds = jax.vmap(try_machine)(jnp.arange(m))
-            j = jnp.argmin(preds)
-            return X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype)), preds.min()
-
-        for _ in range(sweeps):
-            for i in range(n):
-                X, _ = best_move_for(X, jnp.asarray(i))
-        return X
+        X = self.env.round_robin_assignment() if X0 is None else X0
+        return sweep_schedule(X, w, self.theta, self.env, self._params(),
+                              sweeps)
 
 
 # --------------------------------------------------------------------------
 # Agent-interface adapter: [25] as a non-learning Agent.  ``init`` runs the
-# offline profiling + ridge fit (the agent state IS the fitted theta);
-# ``select`` applies one step of model-guided local search per decision
-# epoch — the best single-executor move under the model's latency
-# prediction (the no-op move is a candidate, so "stay" is always allowed).
+# offline profiling + ridge fit under the LANE's EnvParams (the agent state
+# IS the fitted theta — in a heterogeneous fleet every lane fits its own
+# scenario's model); ``select`` applies one step of model-guided local
+# search per decision epoch — the best single-executor move under the
+# model's latency prediction for the lane's scenario (the no-op move is a
+# candidate, so "stay" is always allowed).
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class ModelBasedAgentConfig:
@@ -139,12 +201,13 @@ class ModelBasedAgentConfig:
     ridge_lambda: float = 1e-3
 
 
-def _agent_init(key, cfg: ModelBasedAgentConfig):
-    return fit_theta(key, cfg.env, cfg.fit_samples, cfg.ridge_lambda)
+def _agent_init(key, cfg: ModelBasedAgentConfig, env_params=None):
+    return fit_theta(key, cfg.env, cfg.fit_samples, cfg.ridge_lambda,
+                     env_params)
 
 
 def _agent_select(key, cfg: ModelBasedAgentConfig, theta, s_vec, env_state,
-                  explore):
+                  env_params, explore):
     env = cfg.env
     n, m = env.N, env.M
     X, w = env_state.X, env_state.w
@@ -152,8 +215,7 @@ def _agent_select(key, cfg: ModelBasedAgentConfig, theta, s_vec, env_state,
     def predict_move(move):
         i, j = move // m, move % m
         Xj = X.at[i].set(jax.nn.one_hot(j, m, dtype=X.dtype))
-        f = jnp.concatenate([features(env, Xj, w), jnp.ones(1)])
-        return f @ theta
+        return predict_latency(env, theta, Xj, w, env_params)
 
     preds = jax.vmap(predict_move)(jnp.arange(n * m))
     best = jnp.argmin(preds)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dsdps.simulator import stack_env_params
+
 PEAK_FLOPS = 197e12          # bf16 / chip
 ICI_BW = 50e9                # bytes/s per link
 
@@ -135,7 +137,10 @@ class ExpertPlacementEnv:
         return 1e3 * (jnp.maximum(t_comp, t_comm) + 0.25 * jnp.minimum(t_comp, t_comm)).max()
 
     def evaluate(self, X: jnp.ndarray, w: jnp.ndarray,
-                 speed: jnp.ndarray | None = None) -> jnp.ndarray:
+                 speed: jnp.ndarray | None = None,
+                 params: "PlacementParams | None" = None) -> jnp.ndarray:
+        if speed is None and params is not None:
+            speed = params.speed
         return self.step_time_ms(X, w, speed)
 
     def step(self, key: jax.Array, s: PlacementState, action: jnp.ndarray,
@@ -153,6 +158,98 @@ class ExpertPlacementEnv:
 
     def with_straggler(self, s: PlacementState, device: int, factor: float) -> PlacementState:
         return s._replace(speed=s.speed.at[device].set(factor))
+
+
+# --------------------------------------------------------------------------
+# PlacementParams scenario helpers + named fleets (mirrors
+# dsdps.scenarios for the TPU instantiation).  Builders return per-lane
+# params lists; `build_scenario` stacks them — optionally with
+# broadcast-invariant leaves kept single-copy — so the placement env joins
+# the heterogeneous-fleet story through the same runner.
+# --------------------------------------------------------------------------
+def with_device_straggler(params: PlacementParams, device: int,
+                          factor) -> PlacementParams:
+    """Slow device ``device`` to ``factor`` of nominal speed."""
+    return params._replace(speed=params.speed.at[device].set(factor))
+
+
+def scale_load(params: PlacementParams, factor) -> PlacementParams:
+    """Scale every expert's mean routed-token load (traffic surge)."""
+    return params._replace(base_load=params.base_load * factor)
+
+
+def with_placement_noise(params: PlacementParams, sigma) -> PlacementParams:
+    """Replace the step-time measurement-noise level."""
+    return params._replace(noise_sigma=jnp.asarray(sigma, jnp.float32))
+
+
+def perturb_skew(params: PlacementParams, key: jax.Array,
+                 sigma: float = 0.3) -> PlacementParams:
+    """Lognormal (mean-1 corrected) jitter on per-expert popularity —
+    samples routing-distribution shifts between training phases."""
+    z = jax.random.normal(key, params.base_load.shape)
+    mult = jnp.exp(z * sigma - 0.5 * sigma ** 2)
+    return params._replace(base_load=params.base_load * mult)
+
+
+def _pl_uniform(env, fleet: int) -> list:
+    return [env.default_params()] * fleet
+
+
+def _pl_one_slow_device(env, fleet: int, factor: float = 0.5) -> list:
+    p = env.default_params()
+    return [with_device_straggler(p, i % env.M, factor) for i in range(fleet)]
+
+
+def _pl_skewed_routing(env, fleet: int, sigma: float = 0.3,
+                       seed: int = 0) -> list:
+    p = env.default_params()
+    key = jax.random.PRNGKey(seed)
+    return [perturb_skew(p, jax.random.fold_in(key, i), sigma)
+            for i in range(fleet)]
+
+
+def _pl_traffic_surge(env, fleet: int, amplitude: float = 0.5) -> list:
+    p = env.default_params()
+    return [scale_load(p, 1.0 + amplitude * i / max(fleet - 1, 1))
+            for i in range(fleet)]
+
+
+def _pl_mixed(env, fleet: int, seed: int = 0) -> list:
+    p = env.default_params()
+    key = jax.random.PRNGKey(seed)
+    lanes = []
+    for i in range(fleet):
+        lane = perturb_skew(p, jax.random.fold_in(key, i), 0.2)
+        kind = i % 3
+        if kind == 1:
+            lane = with_device_straggler(lane, i % env.M, 0.5)
+        elif kind == 2:
+            lane = with_placement_noise(scale_load(lane, 1.3), 0.05)
+        lanes.append(lane)
+    return lanes
+
+
+PLACEMENT_SCENARIOS = {
+    "uniform": _pl_uniform,
+    "one_slow_device": _pl_one_slow_device,
+    "skewed_routing": _pl_skewed_routing,
+    "traffic_surge": _pl_traffic_surge,
+    "mixed": _pl_mixed,
+}
+
+
+def build_scenario(name: str, env: ExpertPlacementEnv, fleet: int,
+                   broadcast_invariant: bool = False,
+                   **kwargs) -> PlacementParams:
+    """Stacked PlacementParams for a named placement scenario fleet."""
+    try:
+        builder = PLACEMENT_SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown placement scenario {name!r}; "
+                       f"known: {sorted(PLACEMENT_SCENARIOS)}") from None
+    return stack_env_params(builder(env, fleet, **kwargs),
+                            broadcast_invariant=broadcast_invariant)
 
 
 def jamba_placement_env(num_devices: int = 16) -> ExpertPlacementEnv:

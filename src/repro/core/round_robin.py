@@ -37,12 +37,12 @@ class RoundRobinConfig:
     n_machines: int
 
 
-def _agent_init(key, cfg: RoundRobinConfig):
+def _agent_init(key, cfg: RoundRobinConfig, env_params=None):
     return jnp.zeros((), jnp.int32)
 
 
 def _agent_select(key, cfg: RoundRobinConfig, state, s_vec, env_state,
-                  explore):
+                  env_params, explore):
     idx = jnp.arange(cfg.n_executors) % cfg.n_machines
     X = jax.nn.one_hot(idx, cfg.n_machines, dtype=jnp.float32)
     return X, jnp.zeros(())

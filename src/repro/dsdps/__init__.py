@@ -3,6 +3,7 @@ from repro.dsdps.cluster import ClusterSpec, PAPER_CLUSTER
 from repro.dsdps.simulator import (EnvParams, SimParams,
                                    average_tuple_time_from_params,
                                    average_tuple_time_ms, build_sim_params,
+                                   lane_params, params_in_axes,
                                    params_stacked, perturb_rates,
                                    perturb_service, scale_rates,
                                    stack_env_params, to_env_params,
@@ -16,7 +17,7 @@ __all__ = [
     "Component", "Edge", "Topology", "ClusterSpec", "PAPER_CLUSTER",
     "SimParams", "EnvParams", "average_tuple_time_ms",
     "average_tuple_time_from_params", "build_sim_params", "to_env_params",
-    "params_stacked",
+    "params_stacked", "params_in_axes", "lane_params",
     "perturb_rates", "perturb_service", "scale_rates", "stack_env_params",
     "with_noise_sigma", "with_speed", "with_straggler",
     "WorkloadProcess", "step_rates", "EnvState", "SchedulingEnv", "StepOut",

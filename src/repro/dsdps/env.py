@@ -35,7 +35,7 @@ from repro.dsdps.simulator import (EnvParams, SimParams,
                                    average_tuple_time_from_params,
                                    build_sim_params,
                                    measured_latency_from_params,
-                                   params_stacked)
+                                   params_in_axes)
 from repro.dsdps.topology import Topology
 from repro.dsdps.workload import WorkloadProcess, step_rates
 
@@ -169,11 +169,14 @@ class SchedulingEnv:
                     params: EnvParams | None = None) -> EnvState:
         """Stacked initial states for ``run_online_fleet``: one EnvState per
         lane ([F] leading axis).  ``params`` may be a single EnvParams or a
-        stacked scenario fleet; ``speed_factors`` ([F, M]) is the legacy way
-        to build per-lane straggler scenarios."""
+        stacked scenario fleet (per-leaf broadcast stacks included);
+        ``speed_factors`` ([F, M]) is the legacy way to build per-lane
+        straggler scenarios."""
         p = self.default_params() if params is None else params
-        if params_stacked(p, self.default_params()):
-            states = jax.vmap(lambda k, pp: self.reset(k, pp, X0=X0))(keys, p)
+        axes = params_in_axes(p, self.default_params())
+        if axes is not None:
+            states = jax.vmap(lambda k, pp: self.reset(k, pp, X0=X0),
+                              in_axes=(0, axes))(keys, p)
         else:
             states = jax.vmap(lambda k: self.reset(k, p, X0=X0))(keys)
         if speed_factors is not None:

@@ -11,6 +11,16 @@ framework implies.
     params = scenarios.build("one_slow_machine", env, fleet=8)
     states, hist = run_online_fleet(keys, env, agent, agent_states, T=300,
                                     env_params=params)
+
+``broadcast_invariant=True`` keeps leaves no lane perturbs (routing,
+flow_solve, tuple_bytes, ...) as a single unstacked copy; the fleet runner
+broadcasts them with per-leaf ``in_axes=None`` — numerically identical to
+the fully-stacked fleet without the F× duplicated memory.
+
+This module is the ONE place scenario fleets are constructed: launchers,
+examples, and the paper benchmarks all route through :func:`build` (or
+:func:`build_for`, which also dispatches the TPU expert-placement env's
+scenarios from ``core.placement``) instead of ad-hoc ``perturb_*`` chains.
 """
 from __future__ import annotations
 
@@ -22,21 +32,20 @@ from repro.dsdps.simulator import (EnvParams, perturb_rates, perturb_service,
                                    with_noise_sigma, with_straggler)
 
 
-def uniform(env, fleet: int) -> EnvParams:
+def uniform(env, fleet: int) -> list[EnvParams]:
     """Every lane runs the env's declared parameters (pure seed sweep)."""
     p = env.default_params()
-    return stack_env_params([p] * fleet)
+    return [p] * fleet
 
 
-def one_slow_machine(env, fleet: int, factor: float = 0.35) -> EnvParams:
+def one_slow_machine(env, fleet: int, factor: float = 0.35) -> list[EnvParams]:
     """Lane i slows machine ``i % M`` to ``factor`` of nominal speed — the
     straggler-mitigation stress, one straggler location per lane."""
     p = env.default_params()
-    return stack_env_params(
-        [with_straggler(p, i % env.M, factor) for i in range(fleet)])
+    return [with_straggler(p, i % env.M, factor) for i in range(fleet)]
 
 
-def diurnal_rate(env, fleet: int, amplitude: float = 0.4) -> EnvParams:
+def diurnal_rate(env, fleet: int, amplitude: float = 0.4) -> list[EnvParams]:
     """Lane i's base rates scaled to a point on a daily load curve:
     1 + amplitude*sin(2π i/fleet) — samples the operating regimes a
     day/night traffic cycle sweeps through."""
@@ -45,17 +54,17 @@ def diurnal_rate(env, fleet: int, amplitude: float = 0.4) -> EnvParams:
     for i in range(fleet):
         phase = 2.0 * jnp.pi * i / max(fleet, 1)
         lanes.append(scale_rates(p, 1.0 + amplitude * jnp.sin(phase)))
-    return stack_env_params(lanes)
+    return lanes
 
 
-def high_noise(env, fleet: int, sigma: float = 0.12) -> EnvParams:
+def high_noise(env, fleet: int, sigma: float = 0.12) -> list[EnvParams]:
     """Every lane measures rewards through ``sigma`` lognormal noise —
     4× the paper's telemetry noise; stresses learning robustness."""
     p = env.default_params()
-    return stack_env_params([with_noise_sigma(p, sigma)] * fleet)
+    return [with_noise_sigma(p, sigma)] * fleet
 
 
-def mixed(env, fleet: int, seed: int = 0) -> EnvParams:
+def mixed(env, fleet: int, seed: int = 0) -> list[EnvParams]:
     """Round-robin over the named regimes plus per-lane service-time and
     rate jitter — the 'as many scenarios as you can imagine' fleet."""
     p = env.default_params()
@@ -73,7 +82,7 @@ def mixed(env, fleet: int, seed: int = 0) -> EnvParams:
         elif kind == 3:
             lane = with_noise_sigma(lane, 0.12)
         lanes.append(lane)
-    return stack_env_params(lanes)
+    return lanes
 
 
 SCENARIOS = {
@@ -85,11 +94,46 @@ SCENARIOS = {
 }
 
 
-def build(name: str, env, fleet: int, **kwargs) -> EnvParams:
-    """Stacked EnvParams for a named scenario fleet."""
+def build(name: str, env, fleet: int, broadcast_invariant: bool = False,
+          **kwargs) -> EnvParams:
+    """Stacked EnvParams for a named scenario fleet.
+
+    ``broadcast_invariant=True`` leaves lane-identical leaves unstacked
+    (single copy) for per-leaf in_axes=None broadcasting."""
     try:
         builder = SCENARIOS[name]
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; "
                        f"known: {sorted(SCENARIOS)}") from None
-    return builder(env, fleet, **kwargs)
+    return stack_env_params(builder(env, fleet, **kwargs),
+                            broadcast_invariant=broadcast_invariant)
+
+
+def workload_shift(env, factor: float = 1.5) -> EnvParams:
+    """The Fig-12 step change as a single-scenario EnvParams edit: every
+    spout's base rate scaled by ``factor`` against the same env spec (no
+    env rebuild, no recompile)."""
+    return scale_rates(env.default_params(), factor)
+
+
+def build_for(env, name: str, fleet: int, broadcast_invariant: bool = False,
+              **kwargs):
+    """Scenario fleet for ANY functional env: dispatches DSDPS envs to the
+    EnvParams builders above and ``ExpertPlacementEnv`` to the
+    PlacementParams builders in ``repro.core.placement`` (lazy import —
+    no dsdps↔core import cycle)."""
+    if hasattr(env, "topo"):        # DSDPS scheduling env
+        return build(name, env, fleet,
+                     broadcast_invariant=broadcast_invariant, **kwargs)
+    from repro.core import placement
+    return placement.build_scenario(name, env, fleet,
+                                    broadcast_invariant=broadcast_invariant,
+                                    **kwargs)
+
+
+def scenario_names(env) -> tuple[str, ...]:
+    """Names valid for ``build_for(env, ...)``."""
+    if hasattr(env, "topo"):
+        return tuple(sorted(SCENARIOS))
+    from repro.core import placement
+    return tuple(sorted(placement.PLACEMENT_SCENARIOS))

@@ -199,19 +199,65 @@ def perturb_rates(params: EnvParams, key: jax.Array,
     return params._replace(base_rates=params.base_rates * mult)
 
 
-def stack_env_params(params_list) -> EnvParams:
-    """Stack per-lane EnvParams on a leading [F] fleet axis."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+def stack_env_params(params_list, broadcast_invariant: bool = False):
+    """Stack per-lane params pytrees on a leading [F] fleet axis.
+
+    With ``broadcast_invariant=True``, leaves that are bitwise identical
+    across every lane (typically routing / flow_solve / tuple_bytes, which
+    no scenario perturbs) are kept as a SINGLE unstacked copy instead of
+    being duplicated F× — the fleet runner then vmaps them with
+    ``in_axes=None`` (see :func:`params_in_axes`), dropping the duplicated
+    memory and the batched-matmul FLOPs they would otherwise cost.  Works
+    for any params pytree (EnvParams or PlacementParams)."""
+    def stack_leaf(*xs):
+        if broadcast_invariant and all(
+                x is xs[0] or (jnp.shape(x) == jnp.shape(xs[0])
+                               and bool(jnp.all(x == xs[0])))
+                for x in xs[1:]):
+            return xs[0]
+        return jnp.stack(xs)
+
+    return jax.tree.map(stack_leaf, *params_list)
+
+
+def params_in_axes(params, ref):
+    """Per-leaf ``jax.vmap`` in_axes for a (possibly partially) stacked
+    params pytree: 0 for leaves carrying one more leading axis than the
+    single-scenario reference ``ref``, None for broadcast-invariant leaves.
+    Returns None when NO leaf is stacked (a plain single-scenario params).
+
+    The result is a pytree of ints/None with the same container structure
+    as ``params`` — valid both as a vmap in_axes spec and as a hashable
+    jit static argument (NamedTuple of ints/None)."""
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    ref_flat = jax.tree_util.tree_leaves(ref)
+    if len(flat) != len(ref_flat):
+        raise ValueError("params and reference pytrees differ in structure")
+    axes = [0 if jnp.ndim(p) == jnp.ndim(r) + 1 else None
+            for p, r in zip(flat, ref_flat)]
+    if not any(a == 0 for a in axes):
+        return None
+    return jax.tree_util.tree_unflatten(treedef, axes)
 
 
 def params_stacked(params, ref) -> bool:
-    """True when ``params`` carries one more leading axis than the
-    single-scenario reference ``ref`` — THE stacked-fleet convention,
-    shared by every params-batched code path (compared on the first leaf;
-    works for any params pytree, EnvParams or PlacementParams)."""
-    leaf = jax.tree_util.tree_leaves(params)[0]
-    ref_leaf = jax.tree_util.tree_leaves(ref)[0]
-    return jnp.ndim(leaf) == jnp.ndim(ref_leaf) + 1
+    """True when ``params`` carries a leading fleet axis on ANY leaf — THE
+    stacked-fleet convention shared by every params-batched code path.
+    Broadcast-invariant stacks (``stack_env_params(...,
+    broadcast_invariant=True)``) count as stacked even though some leaves
+    stay single-copy."""
+    return params_in_axes(params, ref) is not None
+
+
+def lane_params(params, ref, lane: int):
+    """Extract lane ``lane`` of a (possibly broadcast-invariant) stacked
+    params pytree as a single-scenario pytree; single-scenario params pass
+    through unchanged.  ``ref`` supplies the unstacked leaf ranks."""
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    ref_flat = jax.tree_util.tree_leaves(ref)
+    picked = [p[lane] if jnp.ndim(p) == jnp.ndim(r) + 1 else p
+              for p, r in zip(flat, ref_flat)]
+    return jax.tree_util.tree_unflatten(treedef, picked)
 
 
 def _latency_core(

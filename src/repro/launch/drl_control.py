@@ -6,14 +6,22 @@ in one jitted, vmapped scan (core/agent.run_online_fleet) and the final
 latency is reported as mean ± std across lanes, with the best lane's
 assignment printed.  ``--agent`` picks any registered control policy
 (core.api.make_agent) and ``--scenario`` swaps the pure seed sweep for a
-named heterogeneous EnvParams fleet (repro.dsdps.scenarios) — per-lane
-workload rates / stragglers / noise in the same single program.
+named heterogeneous params fleet — per-lane workload rates / stragglers /
+noise in the same single program.  All scenario construction routes
+through ``repro.dsdps.scenarios.build_for``, which also dispatches the
+TPU expert-placement env's PlacementParams scenarios
+(``--app placement --scenario one_slow_device``).  Agents initialize
+under their lane's scenario (the model-based baseline profiles and fits
+the lane's cluster — lane-correct speeds/services/noise, not the nominal
+profile), and ``--broadcast-invariant`` keeps scenario-invariant params
+leaves single-copy (per-leaf in_axes=None broadcasting).
 
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
       --offline 2000 --epochs 300 --fleet 8
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
-      --agent dqn --scenario one_slow_machine --fleet 4
-  PYTHONPATH=src python -m repro.launch.drl_control --app placement
+      --agent model_based --scenario one_slow_machine --fleet 4
+  PYTHONPATH=src python -m repro.launch.drl_control --app placement \
+      --scenario one_slow_device
 """
 from __future__ import annotations
 
@@ -26,7 +34,8 @@ import numpy as np
 from repro.core import (agent_names, jamba_placement_env, make_agent,
                         run_online_fleet)
 from repro.core import ddpg as ddpg_lib
-from repro.dsdps import SchedulingEnv, apps, scenarios
+from repro.core.placement import PLACEMENT_SCENARIOS
+from repro.dsdps import SchedulingEnv, apps, lane_params, scenarios
 from repro.dsdps.apps import default_workload
 
 
@@ -44,9 +53,14 @@ def main() -> None:
     ap.add_argument("--agent", default="ddpg", choices=list(agent_names()),
                     help="registered control policy (core.api.make_agent)")
     ap.add_argument("--scenario", default=None,
-                    choices=list(scenarios.SCENARIOS),
-                    help="heterogeneous EnvParams fleet instead of a pure "
-                         "seed sweep (DSDPS apps only)")
+                    choices=sorted(set(scenarios.SCENARIOS)
+                                   | set(PLACEMENT_SCENARIOS)),
+                    help="heterogeneous params fleet instead of a pure "
+                         "seed sweep (EnvParams for DSDPS apps, "
+                         "PlacementParams for --app placement)")
+    ap.add_argument("--broadcast-invariant", action="store_true",
+                    help="keep scenario-invariant params leaves single-copy "
+                         "(per-leaf in_axes=None broadcast in the vmap)")
     ap.add_argument("--offline", type=int, default=2000,
                     help="offline random-action samples (paper: 10,000; "
                          "ddpg only)")
@@ -60,19 +74,26 @@ def main() -> None:
     args = ap.parse_args()
     if args.fleet < 1:
         ap.error("--fleet must be >= 1")
-    if args.scenario and args.app == "placement":
-        ap.error("--scenario applies to DSDPS apps, not placement")
     if args.agent == "model_based" and args.app == "placement":
         ap.error("model_based profiles a DSDPS cluster; use it with the "
                  "Storm apps")
 
     env = build_env(args.app)
+    if args.scenario and args.scenario not in scenarios.scenario_names(env):
+        ap.error(f"scenario {args.scenario!r} is not defined for "
+                 f"--app {args.app}; "
+                 f"known: {scenarios.scenario_names(env)}")
     overrides = {"k_nn": args.k} if args.agent == "ddpg" else {}
     agent = make_agent(args.agent, env, **overrides)
     key = jax.random.PRNGKey(args.seed)
-    states = agent.init_fleet(key, args.fleet)
-    env_params = (scenarios.build(args.scenario, env, args.fleet)
-                  if args.scenario else None)
+    env_params = (scenarios.build_for(
+        env, args.scenario, args.fleet,
+        broadcast_invariant=args.broadcast_invariant)
+        if args.scenario else None)
+    # lanes initialize under their own scenario: the model-based baseline
+    # profiles and fits the lane's cluster, not the nominal one
+    states = agent.init_fleet(key, args.fleet, env_params=env_params,
+                              env=env)
 
     if args.agent == "ddpg" and args.offline > 0:
         print(f"offline pretraining {args.fleet} lanes on {args.offline} "
@@ -96,8 +117,9 @@ def main() -> None:
     X_rr = env.round_robin_assignment()
     for f in range(args.fleet):
         if env_params is not None:
-            lane_p = jax.tree.map(lambda x: x[f], env_params)
-            w_f = lane_p.base_rates
+            lane_p = lane_params(env_params, env.default_params(), f)
+            w_f = (lane_p.base_rates if hasattr(lane_p, "base_rates")
+                   else lane_p.base_load)
         else:
             lane_p = None
             w_f = (env.workload.init() if hasattr(env, "workload")

@@ -77,6 +77,18 @@ def test_jax_beam_contains_exact_1nn():
         assert any(np.array_equal(b, one) for b in beam)
 
 
+def test_pallas_beam_matches_xla_beam_exactly():
+    """knn_actions_jax(use_pallas=True) routes the top-2/regret reduction
+    through the kernels/knn_topk Pallas kernel (interpret mode on CPU) and
+    must match the lax.top_k beam bit for bit."""
+    for seed, (n, m, k) in [(0, (40, 10, 8)), (1, (25, 6, 6)),
+                            (2, (7, 3, 4)), (3, (100, 10, 16))]:
+        proto = jax.random.uniform(jax.random.PRNGKey(seed), (n, m))
+        beam = np.asarray(knn_actions_jax(proto, k))
+        pallas = np.asarray(knn_actions_jax(proto, k, use_pallas=True))
+        np.testing.assert_array_equal(pallas, beam)
+
+
 def test_nearest_assignment_is_row_argmax():
     proto = jnp.asarray([[0.1, 0.9], [0.7, 0.3]])
     a = nearest_assignment(proto)
