@@ -3,6 +3,10 @@ legacy Python loop vs the fully-jitted fleet-batched scan — and, with
 ``--scenario-batched``, the scenario-batched fleet where every lane carries
 its own EnvParams (heterogeneous workload rates × service jitter × noise ×
 stragglers) vmapped through the same one-XLA-program runner.
+``--sharded`` additionally times the mesh-sharded fleet
+(``run_online_fleet(..., mesh=launch.mesh.make_fleet_mesh())``): the fleet
+axis partitioned over every visible device via shard_map, recorded as
+lane-epochs/sec next to the single-device vmap row.
 
 The paper's credibility hinges on seed-swept online-learning curves; this
 bench shows why that is now affordable — one vmapped scan executes the
@@ -12,7 +16,7 @@ parameters: the stacked-params program compiles once, then any scenario
 edit (new rates, stragglers, noise levels) reuses the executable.
 
   PYTHONPATH=src python -m benchmarks.fleet_bench [--fleet 32] [--epochs 300]
-      [--scenario-batched] [--json artifacts/fleet_bench.json]
+      [--scenario-batched] [--sharded] [--json artifacts/fleet_bench.json]
 
 Rows are ``name,us_per_call,derived`` — the benchmarks.run CSV schema
 (us_per_call = microseconds per lane-epoch); the same rows are written to
@@ -25,12 +29,15 @@ import pathlib
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import ddpg as ddpg_lib
+from repro.core import make_agent
 from repro.core.agent import run_online_ddpg_python, run_online_fleet
 from repro.core.ddpg import DDPGConfig
 from repro.dsdps import SchedulingEnv, apps, scenarios
 from repro.dsdps.apps import default_workload
+from repro.launch.mesh import make_fleet_mesh
 
 DEFAULT_JSON = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / \
     "fleet_bench.json"
@@ -44,13 +51,15 @@ def _params_bytes(params) -> int:
 def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
             baseline_epochs: int = 40,
             scenario_batched: bool = False,
-            broadcast_invariant: bool = False) -> list[tuple]:
+            broadcast_invariant: bool = False,
+            sharded: bool = False) -> list[tuple]:
     # the broadcast comparison is a variant OF the scenario-batched fleet
     scenario_batched = scenario_batched or broadcast_invariant
     topo = apps.ALL_APPS[app]()
     env = SchedulingEnv(topo, default_workload(topo))
     cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
                      state_dim=env.state_dim)
+    agent = make_agent("ddpg", env, cfg=cfg)
     state = ddpg_lib.init_state(jax.random.PRNGKey(0), cfg)
     rows = []
 
@@ -69,10 +78,10 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
     states = ddpg_lib.init_fleet(jax.random.PRNGKey(2), cfg, fleet)
     keys = jax.random.split(jax.random.PRNGKey(3), fleet)
     t0 = time.perf_counter()
-    run_online_fleet(keys, env, cfg, states, T=epochs)
+    run_online_fleet(keys, env, agent, states, T=epochs)
     dt_cold = time.perf_counter() - t0              # includes compile
     t0 = time.perf_counter()
-    run_online_fleet(keys, env, cfg, states, T=epochs)
+    run_online_fleet(keys, env, agent, states, T=epochs)
     dt_warm = time.perf_counter() - t0
     eps_warm = fleet * epochs / dt_warm
     eps_cold = fleet * epochs / dt_cold
@@ -90,11 +99,11 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
         # path is what the second timing measures.
         env_params = scenarios.build("mixed", env, fleet)
         t0 = time.perf_counter()
-        run_online_fleet(keys, env, cfg, states, T=epochs,
+        run_online_fleet(keys, env, agent, states, T=epochs,
                          env_params=env_params)
         dt_cold = time.perf_counter() - t0
         t0 = time.perf_counter()
-        run_online_fleet(keys, env, cfg, states, T=epochs,
+        run_online_fleet(keys, env, agent, states, T=epochs,
                          env_params=env_params)
         dt_warm = time.perf_counter() - t0
         eps_scen = fleet * epochs / dt_warm
@@ -112,10 +121,10 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
             # run, minus the F×-duplicated params memory
             bc_params = scenarios.build("mixed", env, fleet,
                                         broadcast_invariant=True)
-            run_online_fleet(keys, env, cfg, states, T=epochs,
+            run_online_fleet(keys, env, agent, states, T=epochs,
                              env_params=bc_params)   # compile
             t0 = time.perf_counter()
-            run_online_fleet(keys, env, cfg, states, T=epochs,
+            run_online_fleet(keys, env, agent, states, T=epochs,
                              env_params=bc_params)
             dt_bc = time.perf_counter() - t0
             eps_bc = fleet * epochs / dt_bc
@@ -125,6 +134,33 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
                          f"vs_stacked_scenario={eps_bc / eps_scen:.2f}x;"
                          f"params_bytes_stacked={_params_bytes(env_params)};"
                          f"params_bytes_broadcast={_params_bytes(bc_params)}"))
+
+    if sharded:
+        # mesh-sharded fleet: the SAME runner with the fleet axis
+        # partitioned over every visible device (shard_map over the data
+        # axis of launch.mesh.make_fleet_mesh()).  On a 1-device host this
+        # measures the sharding machinery's overhead against the plain
+        # vmap row; on a real mesh it is the fleet-capacity scaling row.
+        # Carries are donated on accelerator meshes, so hand the program
+        # fresh copies each call.
+        mesh = make_fleet_mesh()
+        n_dev = mesh.devices.size
+
+        def fresh():
+            return jax.tree.map(jnp.array, states)
+
+        run_online_fleet(keys, env, agent, fresh(), T=epochs,
+                         mesh=mesh)                  # compile
+        t0 = time.perf_counter()
+        run_online_fleet(keys, env, agent, fresh(), T=epochs, mesh=mesh)
+        dt_sh = time.perf_counter() - t0
+        eps_sh = fleet * epochs / dt_sh
+        rows.append((f"fleet_bench_{app}_sharded_f{fleet}_T{epochs}_d{n_dev}",
+                     dt_sh / (fleet * epochs) * 1e6,
+                     f"lane_epochs_per_sec={eps_sh:.1f};"
+                     f"vmap_lane_epochs_per_sec={eps_warm:.1f};"
+                     f"vs_vmap={eps_sh / eps_warm:.2f}x;"
+                     f"devices={n_dev}"))
     return rows
 
 
@@ -143,11 +179,17 @@ def main() -> None:
                          "single-copy, in_axes=None) and report stacked-vs-"
                          "broadcast lane-epochs/sec + params memory "
                          "(implies --scenario-batched)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also time the mesh-sharded fleet (fleet axis "
+                         "over every visible device via shard_map, "
+                         "launch.mesh.make_fleet_mesh) and record "
+                         "lane-epochs/sec for vmap vs sharded")
     ap.add_argument("--json", default=str(DEFAULT_JSON),
                     help="benchmark JSON artifact path ('' disables)")
     args = ap.parse_args()
     rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
-                   args.scenario_batched, args.broadcast_invariant)
+                   args.scenario_batched, args.broadcast_invariant,
+                   args.sharded)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -19,7 +19,7 @@ import numpy as np
 
 from benchmarks.paper_common import (Budget, make_env, run_actor_critic,
                                      run_model_based)
-from repro.core import run_online_fleet
+from repro.core import make_agent, run_online_fleet
 from repro.dsdps import SchedulingEnv, scenarios
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "paper"
@@ -38,7 +38,7 @@ def run(app: str, budget: Budget, seed: int = 0,
     shifted = scenarios.workload_shift(env, shift_factor)
     keys = jax.random.split(jax.random.PRNGKey(seed + 7), budget.n_seeds)
     states, hist = run_online_fleet(
-        keys, env, cfg, states,
+        keys, env, make_agent("ddpg", env, cfg=cfg), states,
         T=max(budget.online_epochs // 3, 40),
         updates_per_epoch=budget.updates_per_epoch,
         env_params=shifted)

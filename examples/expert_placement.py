@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DDPGConfig, ddpg_init, jamba_placement_env, \
-    run_online_ddpg
+    make_agent, run_online_agent
 from repro.core.ddpg import offline_pretrain
 from repro.core.exploration import EpsilonSchedule
 from repro.fault.straggler import StragglerDetector, mitigate_with_drl
@@ -25,8 +25,9 @@ def main() -> None:
     agent = ddpg_init(key, cfg)
     agent = offline_pretrain(jax.random.fold_in(key, 1), agent, cfg, env,
                              n_samples=800, n_updates=300)
-    agent, hist = run_online_ddpg(jax.random.fold_in(key, 2), env, cfg,
-                                  agent, T=200, updates_per_epoch=2)
+    agent, hist = run_online_agent(jax.random.fold_in(key, 2), env,
+                                   make_agent("ddpg", env, cfg=cfg),
+                                   agent, T=200, updates_per_epoch=2)
 
     s = env.reset(key)
     rr = float(env.step_time_ms(env.round_robin_assignment(), s.w))

@@ -1,0 +1,102 @@
+"""Fleet-training checkpoints: periodic, async, atomic, elastic.
+
+:class:`FleetCheckpoint` wraps the generic async atomic
+:class:`~repro.checkpoint.checkpointer.Checkpointer` around the fleet
+runner's carries — per-lane agent states, env states, and PRNG keys —
+tagged by absolute decision epoch.  ``core.agent.run_online_fleet(...,
+checkpoint=ck)`` chunks its epoch scan every ``ck.every`` epochs and calls
+:meth:`FleetCheckpoint.save` after each chunk: arrays are snapshotted to
+host synchronously (cheap) and written by a background thread, and a step
+directory only renames into place once every leaf + manifest hit disk, so
+a kill mid-write never corrupts the newest restorable state.
+
+Restore is ELASTIC: :meth:`restore` loads the lane arrays as full host
+arrays and — given a mesh — re-places them with the *current* mesh's
+fleet shardings (``sharding.fleet.fleet_shardings``), so a run
+checkpointed on an 8-device mesh resumes on 4 devices (or on the host
+mesh) from the same file set.  The resume walkthrough lives in
+docs/sharded_fleets.md; the bit-exactness contract is pinned by
+tests/test_fleet_checkpoint.py."""
+from __future__ import annotations
+
+import pathlib
+
+from repro.checkpoint.checkpointer import AsyncCheckpointer, Checkpointer
+
+
+class FleetCheckpoint:
+    """Checkpoint policy + storage for ``run_online_fleet`` carries.
+
+    ``every`` — checkpoint cadence in decision epochs (the runner chunks
+    its scan on this boundary); ``keep`` — retained checkpoints (older
+    step directories are garbage-collected); ``use_async=False`` swaps
+    the background writer for synchronous writes (tests, final flush)."""
+
+    def __init__(self, directory: str | pathlib.Path, every: int = 50,
+                 keep: int = 3, use_async: bool = True):
+        if every < 1:
+            raise ValueError(f"checkpoint cadence must be >= 1, got {every}")
+        self.every = int(every)
+        self._ck = (AsyncCheckpointer(directory, keep=keep) if use_async
+                    else Checkpointer(directory, keep=keep))
+
+    @property
+    def directory(self) -> pathlib.Path:
+        return self._ck.dir
+
+    @staticmethod
+    def _bundle(agent_states, env_states, keys) -> dict:
+        return {"agent": agent_states, "env": env_states, "keys": keys}
+
+    # -- save ----------------------------------------------------------------
+    def save(self, epoch: int, agent_states, env_states, keys) -> None:
+        """Snapshot the fleet carries at absolute ``epoch`` (async when
+        constructed with ``use_async=True`` — training never blocks on the
+        filesystem; the write publishes atomically)."""
+        bundle = self._bundle(agent_states, env_states, keys)
+        if isinstance(self._ck, AsyncCheckpointer):
+            self._ck.save_async(epoch, bundle)
+        else:
+            self._ck.save(epoch, bundle)
+
+    def wait(self) -> None:
+        """Block until queued async writes are on disk (raises the first
+        background write error, if any)."""
+        if isinstance(self._ck, AsyncCheckpointer):
+            self._ck.wait()
+
+    def close(self) -> None:
+        if isinstance(self._ck, AsyncCheckpointer):
+            self._ck.close()
+
+    # -- restore -------------------------------------------------------------
+    def all_epochs(self) -> list[int]:
+        return self._ck.all_steps()
+
+    def latest_epoch(self) -> int | None:
+        """Newest restorable epoch, or None when the directory is empty."""
+        return self._ck.latest_step()
+
+    def restore(self, agent_states, env_states, keys, epoch: int | None = None,
+                mesh=None):
+        """Load the carries saved at ``epoch`` (default: latest).
+
+        ``agent_states`` / ``env_states`` / ``keys`` supply the target tree
+        STRUCTURE (values are ignored — pass freshly-initialized carries).
+        With ``mesh``, every lane array is re-placed against the current
+        mesh's fleet shardings (leading axis over the data axes,
+        replication fallback when the fleet no longer divides the device
+        count) — the elastic path that lets a run resume after the device
+        count changed.  Returns ``(epoch, agent_states, env_states,
+        keys)``."""
+        self.wait()                       # flush our own pending writes
+        epoch = self.latest_epoch() if epoch is None else epoch
+        if epoch is None:
+            raise FileNotFoundError(f"no fleet checkpoints in {self.directory}")
+        like = self._bundle(agent_states, env_states, keys)
+        shardings = None
+        if mesh is not None:
+            from repro.sharding.fleet import fleet_shardings
+            shardings = fleet_shardings(mesh, like)
+        out = self._ck.restore(like, step=epoch, shardings=shardings)
+        return epoch, out["agent"], out["env"], out["keys"]

@@ -4,8 +4,7 @@ from repro.core.api import (Agent, agent_names, make_agent,
                             make_epoch_step, register_agent)
 from repro.core.ddpg import DDPGConfig, DDPGState, init_state as ddpg_init
 from repro.core.dqn import DQNConfig, DQNState, init_state as dqn_init
-from repro.core.agent import (History, as_agent, run_online_agent,
-                              run_online_ddpg, run_online_dqn,
+from repro.core.agent import (History, reset_fleet_states, run_online_agent,
                               run_online_ddpg_python, run_online_dqn_python,
                               run_online_fleet)
 from repro.core.knn_projection import (
@@ -24,8 +23,7 @@ __all__ = [
     "Agent", "agent_names", "make_agent", "make_epoch_step", "register_agent",
     "DDPGConfig", "DDPGState", "ddpg_init",
     "DQNConfig", "DQNState", "dqn_init",
-    "History", "as_agent", "run_online_agent",
-    "run_online_ddpg", "run_online_dqn", "run_online_fleet",
+    "History", "reset_fleet_states", "run_online_agent", "run_online_fleet",
     "run_online_ddpg_python", "run_online_dqn_python",
     "knn_actions_exact", "knn_actions_jax", "knn_assignments_exact",
     "nearest_assignment", "ModelBasedScheduler",

@@ -10,9 +10,8 @@ reward traces of Figs 7/9/11.
 
 Three execution paths:
 
-  * ``run_online_ddpg`` / ``run_online_dqn`` — ONE online run, executed as
-    a single jitted ``jax.lax.scan`` over decision epochs (thin
-    compatibility wrappers over the Agent path);
+  * ``run_online_agent`` — ONE online run of any registry agent, executed
+    as a single jitted ``jax.lax.scan`` over decision epochs;
 
   * ``run_online_fleet`` — MANY independent runs executed as one XLA
     program: ``jax.vmap`` over a fleet axis of the same scan.  Lanes may
@@ -22,10 +21,26 @@ Three execution paths:
     stragglers train in ONE program.  This is what makes Decima-style
     train-over-a-distribution-of-workloads affordable here.
 
+  * ``run_online_fleet(..., mesh=...)`` — the same fleet partitioned over
+    a device mesh: the fleet axis of every carry (keys, agent states, env
+    states, stacked EnvParams leaves) shards over the mesh's data axes
+    via ``shard_map`` (repro/sharding/fleet.py), so fleet capacity is the
+    whole mesh's memory, not one accelerator's.  On real accelerators the
+    carries are donated (the epoch scan runs in-place); on the 1-device
+    host mesh the path is bit-comparable to the plain vmap runner.
+    Passing ``checkpoint=`` (a
+    :class:`repro.checkpoint.fleet.FleetCheckpoint`) chunks the epoch
+    scan every ``checkpoint.every`` epochs and atomically snapshots the
+    carries in the background, so long heterogeneous-scenario runs
+    survive restarts and device-count changes (docs/sharded_fleets.md).
+
 Executable caching is jit's own: the env spec and the Agent bundle are
 hashable static arguments of module-level jitted programs, and EnvParams
 are traced, so re-running with new scenario parameters never recompiles.
-(The pre-v1 ``id(env)``-keyed ``_RUNNER_CACHE`` is gone.)
+(The pre-v1 ``id(env)``-keyed ``_RUNNER_CACHE`` is gone, and the PR-2
+``run_online_ddpg`` / ``run_online_dqn`` bare-config wrappers were
+removed when their deprecation window closed — build an Agent with
+``make_agent(name, env, cfg=...)`` instead.)
 
 The legacy per-epoch Python loops are kept as ``run_online_*_python`` —
 they are the bit-exactness reference for the scan runners
@@ -38,11 +53,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 
 from repro.core import ddpg, dqn
 from repro.core.api import Agent, make_epoch_step
 from repro.core.ddpg import DDPGConfig, DDPGState
 from repro.core.dqn import DQNConfig, DQNState
+from repro.sharding.fleet import fleet_spec, shard_fleet
 
 
 @dataclasses.dataclass
@@ -115,24 +132,21 @@ def _smooth_moving_average(r: np.ndarray, cutoff: float) -> np.ndarray:
     return sm
 
 
-def as_agent(agent_or_cfg, name: str | None = None) -> Agent:
-    """Coerce a bare DDPGConfig / DQNConfig into its Agent bundle (the
-    deprecation shim behind the pre-v1 ``run_online_*(..., cfg, ...)``
-    call style); Agent instances pass through."""
-    if isinstance(agent_or_cfg, Agent):
-        return agent_or_cfg
-    if isinstance(agent_or_cfg, DDPGConfig):
-        return ddpg.as_agent(agent_or_cfg)
-    if isinstance(agent_or_cfg, DQNConfig):
-        return dqn.as_agent(agent_or_cfg)
-    raise TypeError(f"expected an Agent or a DDPG/DQN config, got "
-                    f"{type(agent_or_cfg).__name__}")
+def _require_agent(agent) -> Agent:
+    """The runners take api.Agent bundles only.  (The PR-2 deprecation
+    window during which bare DDPG/DQN configs were coerced has closed.)"""
+    if not isinstance(agent, Agent):
+        raise TypeError(
+            f"expected an api.Agent, got {type(agent).__name__}; build one "
+            f"with make_agent(name, env, cfg=...) or ddpg/dqn.as_agent(cfg) "
+            f"(the pre-v1 bare-config call style was removed)")
+    return agent
 
 
 # --------------------------------------------------------------------------
-# The two jitted programs.  env + agent are hashable static arguments —
-# jit's cache replaces the old id(env)-keyed runner cache — and EnvParams
-# ride as traced pytrees, so scenario changes never recompile.  Executables
+# The jitted programs.  env + agent are hashable static arguments — jit's
+# cache replaces the old id(env)-keyed runner cache — and EnvParams ride
+# as traced pytrees, so scenario changes never recompile.  Executables
 # (and the env specs they key on) live for the process: far fewer entries
 # than the old per-env-instance cache since params changes reuse programs,
 # but a sweep over many (env, agent, T) combos can call jax.clear_caches()
@@ -150,33 +164,74 @@ def _single_program(key, state, env_state, env_params, *, env, agent: Agent,
     return state, rewards, lats, moved, env_state.X
 
 
-@partial(jax.jit,
-         static_argnames=("env", "agent", "T", "updates_per_epoch", "explore",
-                          "params_axes"))
-def _fleet_program(keys, states, env_states, env_params, *, env, agent: Agent,
-                   T: int, updates_per_epoch: int, explore: bool,
-                   params_axes):
-    """``params_axes`` is the per-leaf vmap axis spec for ``env_params``
+def _fleet_fn(keys, states, env_states, env_params, *, env, agent: Agent,
+              T: int, updates_per_epoch: int, explore: bool, params_axes):
+    """The fleet body: vmap of the fused epoch scan over the lane axis.
+
+    ``params_axes`` is the per-leaf vmap axis spec for ``env_params``
     (simulator.params_in_axes): an EnvParams-shaped pytree of 0/None —
     scenario-invariant leaves broadcast with None instead of being stacked
     F× — or plain None when every lane shares one scenario.  It is a
-    hashable NamedTuple of ints/None, so it rides jit as a static arg."""
+    hashable NamedTuple of ints/None, so it rides jit as a static arg.
+
+    Returns the FULL evolved carries ``(states, env_states, keys)`` plus
+    the ``(rewards, lats, moved)`` traces — the carries are what fleet
+    checkpointing snapshots and what chunked runs thread from one scan
+    call into the next."""
     def lane(key, state, env_state, lane_params):
         epoch = make_epoch_step(env, agent, env_params=lane_params,
                                 updates_per_epoch=updates_per_epoch,
                                 explore=explore)
-        (state, env_state, _), (rewards, lats, moved) = jax.lax.scan(
+        (state, env_state, key), (rewards, lats, moved) = jax.lax.scan(
             epoch, (state, env_state, key), None, length=T)
-        return state, rewards, lats, moved, env_state.X
+        return state, env_state, key, rewards, lats, moved
 
     in_axes = (0, 0, 0, params_axes)
     return jax.vmap(lane, in_axes=in_axes)(keys, states, env_states,
                                            env_params)
 
 
-def _run_single(key, env, agent_or_cfg, state, T, updates_per_epoch, explore,
+_FLEET_STATICS = ("env", "agent", "T", "updates_per_epoch", "explore",
+                  "params_axes")
+_fleet_program = jax.jit(_fleet_fn, static_argnames=_FLEET_STATICS)
+
+
+def _sharded_fleet_fn(keys, states, env_states, env_params, *, env,
+                      agent: Agent, T: int, updates_per_epoch: int,
+                      explore: bool, params_axes, mesh, params_specs):
+    """The fleet body wrapped in ``shard_map``: every carry partitions its
+    leading fleet axis over the mesh's data axes; ``params_specs``
+    (sharding.fleet.params_partition_specs) replicates broadcast-invariant
+    EnvParams leaves instead of sharding them.  Lanes are independent, so
+    the body needs no collectives — each device runs the vmapped scan over
+    its local lanes (check_rep stays off: no replicated outputs to
+    certify, and the scan body trips no replication rules)."""
+    spec = fleet_spec(mesh)
+    body = partial(_fleet_fn, env=env, agent=agent, T=T,
+                   updates_per_epoch=updates_per_epoch, explore=explore,
+                   params_axes=params_axes)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(spec, spec, spec, params_specs),
+                   out_specs=(spec, spec, spec, spec, spec, spec),
+                   check_rep=False)
+    return fn(keys, states, env_states, env_params)
+
+
+_SHARDED_STATICS = _FLEET_STATICS + ("mesh", "params_specs")
+_fleet_program_sharded = jax.jit(_sharded_fleet_fn,
+                                 static_argnames=_SHARDED_STATICS)
+# Donated variant for real accelerator meshes: the carries (keys, agent
+# states, env states) are consumed in place, halving fleet memory across
+# chunked checkpointed runs.  CPU meshes use the non-donated program (jax
+# cannot donate on cpu and would warn on every call).
+_fleet_program_sharded_donated = jax.jit(_sharded_fleet_fn,
+                                         static_argnames=_SHARDED_STATICS,
+                                         donate_argnums=(0, 1, 2))
+
+
+def _run_single(key, env, agent, state, T, updates_per_epoch, explore,
                 env_params=None):
-    agent = as_agent(agent_or_cfg)
+    agent = _require_agent(agent)
     params = env.default_params() if env_params is None else env_params
     k_env, key = jax.random.split(key)
     env_state = env.reset(k_env, params)
@@ -189,38 +244,6 @@ def _run_single(key, env, agent_or_cfg, state, T, updates_per_epoch, explore,
                           final_assignment=np.asarray(X))
 
 
-def run_online_ddpg(
-    key: jax.Array,
-    env,
-    cfg: DDPGConfig,
-    state: DDPGState,
-    T: int,
-    updates_per_epoch: int = 1,
-    explore: bool = True,
-    env_params=None,
-) -> tuple[DDPGState, History]:
-    """One online actor-critic run as a single jitted scan over epochs
-    (compat wrapper over the Agent path)."""
-    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore,
-                       env_params=env_params)
-
-
-def run_online_dqn(
-    key: jax.Array,
-    env,
-    cfg: DQNConfig,
-    state: DQNState,
-    T: int,
-    updates_per_epoch: int = 1,
-    explore: bool = True,
-    env_params=None,
-) -> tuple[DQNState, History]:
-    """One online DQN run as a single jitted scan over epochs (compat
-    wrapper over the Agent path)."""
-    return _run_single(key, env, cfg, state, T, updates_per_epoch, explore,
-                       env_params=env_params)
-
-
 def run_online_agent(
     key: jax.Array,
     env,
@@ -231,28 +254,59 @@ def run_online_agent(
     explore: bool = True,
     env_params=None,
 ):
-    """One online run of any registry agent (the v1-native single-run
-    entry point)."""
+    """One online run of any registry agent as a single jitted scan over
+    ``T`` decision epochs.
+
+    ``key`` is split once for the env reset, then carried through the
+    fused epoch scan with the same key discipline as the legacy Python
+    oracles (``run_online_*_python``), so the scan reproduces their
+    traces.  ``env_params`` is a single scenario pytree (defaults to
+    ``env.default_params()``).  Returns ``(agent_state, History)`` with
+    ``[T]`` traces."""
     return _run_single(key, env, agent, state, T, updates_per_epoch, explore,
                        env_params=env_params)
+
+
+def reset_fleet_states(keys: jax.Array, env, env_params=None):
+    """Stacked per-lane initial EnvStates: vmapped ``env.reset`` over a
+    ``[fleet]`` key array, with per-leaf broadcast handling when
+    ``env_params`` is a (possibly broadcast-invariant) stacked scenario
+    fleet.  Works for ANY functional env (SchedulingEnv's ``reset_fleet``
+    adds DSDPS-specific extras like legacy speed_factors on top of this).
+
+    This is also the structure template
+    :meth:`repro.checkpoint.fleet.FleetCheckpoint.restore` needs for the
+    ``env_states`` tree when resuming a run (values are ignored — only
+    shapes/dtypes/structure matter)."""
+    if env_params is None:
+        env_params = env.default_params()
+        params_axes = None
+    else:
+        from repro.dsdps.simulator import params_in_axes
+        params_axes = params_in_axes(env_params, env.default_params())
+    if params_axes is not None:
+        return jax.vmap(env.reset, in_axes=(0, params_axes))(keys, env_params)
+    return jax.vmap(lambda k: env.reset(k, env_params))(keys)
 
 
 def run_online_fleet(
     keys: jax.Array,
     env,
-    agent,
+    agent: Agent,
     states,
     T: int,
     updates_per_epoch: int = 1,
     explore: bool = True,
     env_states=None,
     env_params=None,
+    mesh=None,
+    checkpoint=None,
+    start_epoch: int = 0,
 ):
     """Fleet-batched online learning: one XLA program for [fleet] runs.
 
     ``keys``   — stacked per-lane PRNG keys ([fleet] key array);
-    ``agent``  — an api.Agent (make_agent(...)) or, for compatibility, a
-                 bare DDPGConfig / DQNConfig;
+    ``agent``  — an api.Agent (make_agent(...));
     ``states`` — per-lane agent states stacked on a leading [fleet] axis
                  (agent.init_fleet / ddpg.init_fleet / dqn.init_fleet,
                  optionally pretrained with ddpg.offline_pretrain_fleet);
@@ -272,34 +326,86 @@ def run_online_fleet(
                  speed factors, initial assignments, warm workload states.
                  When omitted, every lane resets the env exactly as the
                  single-run API does (so fleet lane i bit-matches a
-                 run_online_* call with the same key, initial state, and
-                 params lane).
+                 run_online_agent call with the same key, initial state,
+                 and params lane).
+    ``mesh``   — optional ``jax.sharding.Mesh``: the fleet axis of every
+                 carry shards over the mesh's data axes (every axis except
+                 "model") via shard_map, so the fleet's memory footprint
+                 spreads over the whole mesh instead of one device.  The
+                 fleet size must be a multiple of the data-axis device
+                 count.  On accelerator meshes the carries are DONATED —
+                 don't reuse ``states``/``env_states``/``keys`` buffers
+                 after the call; on CPU meshes (launch.mesh.make_host_mesh)
+                 nothing is donated and lane i stays bit-comparable to the
+                 un-sharded vmap run (modulo the documented broadcast-
+                 matmul ulp caveat).
+    ``checkpoint`` — optional repro.checkpoint.fleet.FleetCheckpoint: the
+                 epoch scan is chunked every ``checkpoint.every`` epochs
+                 and the full carries (agent states, env states, keys) are
+                 snapshotted asynchronously and atomically after each
+                 chunk, tagged with the absolute epoch number.  A chunked
+                 run threads the scan carry between chunks, so a run
+                 restored from epoch k continues bit-identically to an
+                 uninterrupted run with the same cadence.
+    ``start_epoch`` — absolute epoch this call starts at (resume offset):
+                 only affects checkpoint numbering.  ``T`` is always the
+                 number of epochs executed BY THIS CALL.
 
     Returns (stacked agent states, History with [fleet, T] traces)."""
-    agent = as_agent(agent)
+    agent = _require_agent(agent)
+    T = int(T)
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
     keys = jnp.asarray(keys)
+    ref = env.default_params()
     if env_params is None:
-        env_params = env.default_params()
+        env_params = ref
         params_axes = None
     else:
         from repro.dsdps.simulator import params_in_axes
-        params_axes = params_in_axes(env_params, env.default_params())
+        params_axes = params_in_axes(env_params, ref)
     if env_states is None:
         pairs = jax.vmap(jax.random.split)(keys)          # [F, 2] keys
         k_env, keys = pairs[:, 0], pairs[:, 1]
-        if params_axes is not None:
-            env_states = jax.vmap(env.reset, in_axes=(0, params_axes))(
-                k_env, env_params)
-        else:
-            env_states = jax.vmap(lambda k: env.reset(k, env_params))(k_env)
-    states, rewards, lats, moved, X = _fleet_program(
-        keys, states, env_states, env_params, env=env, agent=agent, T=int(T),
-        updates_per_epoch=int(updates_per_epoch), explore=bool(explore),
-        params_axes=params_axes)
-    return states, History(rewards=np.asarray(rewards),
-                           latencies=np.asarray(lats),
-                           moved=np.asarray(moved),
-                           final_assignment=np.asarray(X))
+        env_states = reset_fleet_states(k_env, env, env_params)
+
+    common = dict(env=env, agent=agent,
+                  updates_per_epoch=int(updates_per_epoch),
+                  explore=bool(explore), params_axes=params_axes)
+    if mesh is not None:
+        keys, states, env_states, env_params, params_specs = shard_fleet(
+            mesh, keys, states, env_states, env_params, ref)
+        donate = mesh.devices.flat[0].platform != "cpu"
+        program = (_fleet_program_sharded_donated if donate
+                   else _fleet_program_sharded)
+        common.update(mesh=mesh, params_specs=params_specs)
+    else:
+        program = _fleet_program
+
+    every = getattr(checkpoint, "every", None) if checkpoint is not None \
+        else None
+    if every:
+        chunks = [every] * (T // every)
+        if T % every:
+            chunks.append(T % every)
+    else:
+        chunks = [T]
+
+    epoch = int(start_epoch)
+    r_parts, l_parts, m_parts = [], [], []
+    for n in chunks:
+        states, env_states, keys, rewards, lats, moved = program(
+            keys, states, env_states, env_params, T=n, **common)
+        r_parts.append(np.asarray(rewards))
+        l_parts.append(np.asarray(lats))
+        m_parts.append(np.asarray(moved))
+        epoch += n
+        if checkpoint is not None:
+            checkpoint.save(epoch, states, env_states, keys)
+    return states, History(rewards=np.concatenate(r_parts, axis=-1),
+                           latencies=np.concatenate(l_parts, axis=-1),
+                           moved=np.concatenate(m_parts, axis=-1),
+                           final_assignment=np.asarray(env_states.X))
 
 
 # --------------------------------------------------------------------------

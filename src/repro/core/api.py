@@ -37,6 +37,10 @@ and learners run through the same one-XLA-program fleet path.
     states, hist = run_online_fleet(keys, env, agent, states, T=300)
 
 Built-in names: ``ddpg``, ``dqn``, ``round_robin``, ``model_based``.
+The runners take Agent bundles ONLY — the PR-2 window during which bare
+DDPG/DQN configs were coerced has closed; wrap a ready config with
+``make_agent(name, env, cfg=cfg)``.  The full interface contract is
+documented in docs/core_api.md.
 """
 from __future__ import annotations
 
@@ -51,11 +55,20 @@ class Agent(NamedTuple):
 
     Fields hold module-level functions taking the config explicitly (so
     equality/hashing works for jit static args); the ``init/select/...``
-    methods are the ergonomic curried surface."""
+    methods are the ergonomic curried surface.  Signatures (the PR-3
+    params-aware contract):
+
+        init_fn(key, cfg, env_params)                       -> agent_state
+        select_fn(key, cfg, state, s_vec, env_state,
+                  env_params, explore)                      -> (action, aux)
+        observe_fn(cfg, state, s_vec, aux, reward, s_next)  -> agent_state
+        update_fn(key, cfg, state)                          -> agent_state
+        tick_fn(cfg, state)                                 -> agent_state
+    """
 
     name: str
     cfg: Any
-    init_fn: Callable[[jax.Array, Any], Any]
+    init_fn: Callable[[jax.Array, Any, Any], Any]
     select_fn: Callable[..., tuple[jnp.ndarray, Any]]
     observe_fn: Callable[..., Any]
     update_fn: Callable[[jax.Array, Any, Any], Any]

@@ -4,7 +4,8 @@ The paper's scheduling problem — assign N threads to M machines to minimize
 end-to-end latency — is isomorphic to placing N MoE experts onto M devices
 of a TPU slice to minimize per-step time under skewed routing and
 stragglers (DESIGN.md §3/§6).  The environment below exposes the exact
-surface `run_online_ddpg` expects, with:
+functional surface the agent runners (`run_online_agent` /
+`run_online_fleet`) expect, with:
 
   state   (X, w):  expert→device assignment + per-expert token load
   action  one-hot [N_experts, M_devices]

@@ -228,7 +228,11 @@ def params_in_axes(params, ref):
 
     The result is a pytree of ints/None with the same container structure
     as ``params`` — valid both as a vmap in_axes spec and as a hashable
-    jit static argument (NamedTuple of ints/None)."""
+    jit static argument (NamedTuple of ints/None).  This stacked-vs-
+    invariant distinction is also what the device-sharded fleet path keys
+    on: ``repro.sharding.fleet.params_partition_specs`` maps the same
+    leaves to PartitionSpecs (stacked → fleet axis over the mesh's data
+    axes, invariant → replicated) for ``run_online_fleet(..., mesh=...)``."""
     flat, treedef = jax.tree_util.tree_flatten(params)
     ref_flat = jax.tree_util.tree_leaves(ref)
     if len(flat) != len(ref_flat):

@@ -16,12 +16,22 @@ the lane's cluster — lane-correct speeds/services/noise, not the nominal
 profile), and ``--broadcast-invariant`` keeps scenario-invariant params
 leaves single-copy (per-leaf in_axes=None broadcasting).
 
+Production scale-out: ``--sharded`` partitions the fleet axis over every
+visible device (``launch.mesh.make_fleet_mesh``, shard_map under the
+hood), and ``--checkpoint-dir DIR`` snapshots the fleet carries
+asynchronously + atomically every ``--checkpoint-every`` epochs; a killed
+run restarted with ``--resume`` picks up from the newest checkpoint,
+re-placed against the current mesh (device counts may differ between
+save and restore).  See docs/sharded_fleets.md.
+
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
       --offline 2000 --epochs 300 --fleet 8
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
       --agent model_based --scenario one_slow_machine --fleet 4
   PYTHONPATH=src python -m repro.launch.drl_control --app placement \
       --scenario one_slow_device
+  PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
+      --fleet 8 --sharded --checkpoint-dir /tmp/fleet_ck --resume
 """
 from __future__ import annotations
 
@@ -32,11 +42,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (agent_names, jamba_placement_env, make_agent,
-                        run_online_fleet)
+                        reset_fleet_states, run_online_fleet)
 from repro.core import ddpg as ddpg_lib
 from repro.core.placement import PLACEMENT_SCENARIOS
+from repro.checkpoint.fleet import FleetCheckpoint
 from repro.dsdps import SchedulingEnv, apps, lane_params, scenarios
 from repro.dsdps.apps import default_workload
+from repro.launch.mesh import make_fleet_mesh
+from repro.sharding.fleet import fleet_size
 
 
 def build_env(app: str):
@@ -71,6 +84,19 @@ def main() -> None:
                          "XLA program")
     ap.add_argument("--k", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sharded", action="store_true",
+                    help="partition the fleet axis over every visible "
+                         "device (launch.mesh.make_fleet_mesh + shard_map); "
+                         "--fleet must be a multiple of the device count")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for async atomic fleet checkpoints "
+                         "(FleetCheckpoint); enables crash recovery")
+    ap.add_argument("--checkpoint-every", type=int, default=50,
+                    help="checkpoint cadence in decision epochs")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint in "
+                         "--checkpoint-dir (re-placed against the current "
+                         "mesh) instead of starting fresh")
     args = ap.parse_args()
     if args.fleet < 1:
         ap.error("--fleet must be >= 1")
@@ -95,7 +121,37 @@ def main() -> None:
     states = agent.init_fleet(key, args.fleet, env_params=env_params,
                               env=env)
 
-    if args.agent == "ddpg" and args.offline > 0:
+    mesh = make_fleet_mesh() if args.sharded else None
+    if mesh is not None and args.fleet % fleet_size(mesh) != 0:
+        # elastic degradation: a checkpoint may be resumed on a machine
+        # whose device count no longer divides the fleet — run un-sharded
+        # rather than dying in shard_fleet's divisibility check
+        print(f"--fleet {args.fleet} does not divide the "
+              f"{fleet_size(mesh)} data-axis devices; falling back to the "
+              f"un-sharded vmap runner")
+        mesh = None
+    ck = (FleetCheckpoint(args.checkpoint_dir, every=args.checkpoint_every)
+          if args.checkpoint_dir else None)
+    keys = jax.random.split(jax.random.fold_in(key, 2), args.fleet)
+    env_states, start_epoch, restored = None, 0, False
+    if args.resume:
+        if ck is None:
+            ap.error("--resume needs --checkpoint-dir")
+        if ck.latest_epoch() is not None:
+            like_env = reset_fleet_states(keys, env, env_params)
+            start_epoch, states, env_states, keys = ck.restore(
+                states, like_env, keys, mesh=mesh)
+            restored = True
+            print(f"resuming from checkpoint epoch {start_epoch} "
+                  f"({ck.directory})")
+        if start_epoch >= args.epochs:
+            print(f"checkpoint already at epoch {start_epoch} >= "
+                  f"--epochs {args.epochs}; nothing left to run")
+            return
+
+    # offline pretraining only seeds a FRESH run: restored lanes already
+    # carry their replay buffers and trained networks
+    if not restored and args.agent == "ddpg" and args.offline > 0:
         print(f"offline pretraining {args.fleet} lanes on {args.offline} "
               f"random transitions each ...")
         states = ddpg_lib.offline_pretrain_fleet(
@@ -105,11 +161,17 @@ def main() -> None:
             env_params=env_params)
 
     scen = f" ({args.scenario} scenario fleet)" if args.scenario else ""
+    where = (f" sharded over {mesh.devices.size} devices" if mesh is not None
+             else "")
     print(f"online learning: {args.agent} fleet of {args.fleet} x "
-          f"{args.epochs} decision epochs in one batched scan{scen} ...")
+          f"{args.epochs - start_epoch} decision epochs in one batched "
+          f"scan{scen}{where} ...")
     states, hist = run_online_fleet(
-        jax.random.split(jax.random.fold_in(key, 2), args.fleet),
-        env, agent, states, T=args.epochs, env_params=env_params)
+        keys, env, agent, states, T=args.epochs - start_epoch,
+        env_params=env_params, env_states=env_states, mesh=mesh,
+        checkpoint=ck, start_epoch=start_epoch)
+    if ck is not None:
+        ck.close()
 
     # score every lane under the scenario it actually ran (round-robin too,
     # so the improvement column compares like with like per lane)

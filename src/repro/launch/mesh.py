@@ -16,5 +16,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_host_mesh():
     """Degenerate 1×1 mesh over the single real CPU device — used by smoke
-    tests and examples so the same pjit code paths run un-sharded."""
+    tests and examples so the same pjit code paths run un-sharded.  For
+    the fleet runner this is the bit-comparability anchor: a
+    ``run_online_fleet(..., mesh=make_host_mesh())`` run shards nothing,
+    so its lanes match the plain vmap path."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """Data-only mesh over the host's visible devices for fleet sharding:
+    shape ``(n, 1)`` over ``("data", "model")``, so the fleet axis of a
+    ``run_online_fleet(..., mesh=...)`` call partitions over all ``n``
+    devices while the "model" axis stays degenerate (control-policy nets
+    are tiny; lanes, not layers, are what need the memory).  Defaults to
+    every visible device — on a single-device host this degenerates to
+    :func:`make_host_mesh`."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,115 @@
+"""Fleet-axis sharding: partition scenario-fleet carries over a mesh.
+
+The fleet runner (``core/agent.run_online_fleet``) vmaps one online run
+over a leading ``[fleet]`` axis; everything here is about placing that
+axis over hardware.  A mesh's *data* axes (every axis except ``"model"``,
+matching :class:`repro.sharding.policy.MeshAxes`) carry the fleet: lane
+arrays — stacked PRNG keys, agent states, env states, and the stacked
+leaves of a scenario ``EnvParams`` fleet — shard their leading axis over
+those devices, while broadcast-invariant params leaves (kept single-copy
+by ``stack_env_params(..., broadcast_invariant=True)``) replicate.
+
+Two entry points:
+
+* :func:`fleet_shardings` — a matching pytree of ``NamedSharding`` for
+  any fleet-stacked carry tree (used by elastic checkpoint restore to
+  re-place loaded lanes against the *current* mesh);
+* :func:`shard_fleet` — ``device_put`` the runner's four input trees onto
+  the mesh and return the hashable params PartitionSpec tree the sharded
+  program needs.
+
+On :func:`repro.launch.mesh.make_host_mesh` (one CPU device) every spec
+degenerates to a single shard, so the sharded code path stays
+bit-comparable to the plain vmap path — that is what the CPU equivalence
+tests pin."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fleet_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh axes that carry the fleet: every axis except ``"model"``
+    (the same data/FSDP grouping as ``sharding.policy.MeshAxes``)."""
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def fleet_size(mesh: Mesh) -> int:
+    """Number of devices the fleet axis is partitioned over."""
+    return int(np.prod([mesh.shape[a] for a in fleet_axes(mesh)]))
+
+
+def fleet_spec(mesh: Mesh) -> P:
+    """PartitionSpec sharding an array's leading (fleet) axis over the
+    mesh's data axes; trailing dims stay unsharded."""
+    return P(fleet_axes(mesh))
+
+
+def fleet_shardings(mesh: Mesh, tree):
+    """Matching pytree of ``NamedSharding`` placing every leaf's leading
+    ``[fleet]`` axis over the mesh's data axes.
+
+    Leaves that cannot shard — scalars, or a leading dim not divisible by
+    the data-axis size — fall back to replication instead of erroring, so
+    a checkpoint written for fleet=8 restores on a 3-device mesh (lanes
+    replicated) rather than crashing: the elastic-restore contract."""
+    axes = fleet_axes(mesh)
+    n = fleet_size(mesh)
+
+    def leaf_sharding(x):
+        shape = np.shape(x)
+        if len(shape) >= 1 and n > 0 and shape[0] % n == 0:
+            return NamedSharding(mesh, P(axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf_sharding, tree)
+
+
+def params_partition_specs(params, ref, mesh: Mesh):
+    """Per-leaf PartitionSpec tree for a (possibly broadcast-invariant)
+    stacked params fleet: stacked leaves shard their leading ``[F]`` axis
+    over the mesh's data axes, broadcast-invariant leaves replicate.  A
+    single-scenario ``params`` (nothing stacked vs ``ref``) replicates
+    everywhere.  The result has the params' own container structure
+    (a NamedTuple of PartitionSpecs → hashable → valid jit static arg)."""
+    axes = fleet_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    ref_flat = jax.tree_util.tree_leaves(ref)
+    if len(flat) != len(ref_flat):
+        raise ValueError("params and reference pytrees differ in structure")
+    specs = [P(axes) if np.ndim(p) == np.ndim(r) + 1 else P()
+             for p, r in zip(flat, ref_flat)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shard_fleet(mesh: Mesh, keys, states, env_states, env_params, ref):
+    """Place the fleet runner's carries on ``mesh``.
+
+    ``keys``/``states``/``env_states`` shard their leading fleet axis over
+    the mesh's data axes; ``env_params`` shards only its stacked leaves
+    (``ref`` — the env's single-scenario ``default_params()`` — tells the
+    two apart), replicating broadcast-invariant ones.  The fleet size must
+    divide the data-axis device count (``shard_map`` partitions evenly).
+
+    Returns ``(keys, states, env_states, env_params, params_specs)`` with
+    every array committed to its ``NamedSharding`` and ``params_specs``
+    the hashable PartitionSpec tree for the sharded program."""
+    n = fleet_size(mesh)
+    F = int(np.shape(keys)[0])
+    if F % n != 0:
+        raise ValueError(
+            f"fleet size {F} does not divide over the mesh's {n} data-axis "
+            f"devices; pick a fleet that is a multiple of {n} (or run the "
+            f"un-sharded vmap path with mesh=None)")
+    spec = fleet_spec(mesh)
+    shard = NamedSharding(mesh, spec)
+    put = lambda tree: jax.tree.map(lambda x: jax.device_put(x, shard), tree)
+    keys = jax.device_put(keys, shard)
+    states = put(states)
+    env_states = put(env_states)
+    params_specs = params_partition_specs(env_params, ref, mesh)
+    env_params = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        env_params, params_specs)
+    return keys, states, env_states, env_params, params_specs

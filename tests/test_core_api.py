@@ -15,8 +15,8 @@ import pytest
 
 import repro.core.agent as agent_mod
 from repro.core import (DDPGConfig, DQNConfig, agent_names, ddpg_init,
-                        make_agent, run_online_agent, run_online_ddpg,
-                        run_online_ddpg_python, run_online_dqn,
+                        make_agent, run_online_agent,
+                        run_online_ddpg_python,
                         run_online_dqn_python, run_online_fleet)
 from repro.core import ddpg, dqn
 from repro.core.agent import History
@@ -141,15 +141,16 @@ def test_heterogeneous_fleet_matches_single_runs(small_env, ddpg_cfg):
     ]
     params = stack_env_params(lanes)
     F, T = len(lanes), 8
+    agent = make_agent("ddpg", env, cfg=cfg)
     states = ddpg.init_fleet(jax.random.PRNGKey(1), cfg, F)
     keys = jax.random.split(jax.random.PRNGKey(2), F)
-    _, h_fleet = run_online_fleet(keys, env, cfg, states, T=T,
+    _, h_fleet = run_online_fleet(keys, env, agent, states, T=T,
                                   env_params=params)
     assert h_fleet.rewards.shape == (F, T)
     for i in range(F):
         st_i = jax.tree.map(lambda x: x[i], states)
-        _, h_i = run_online_ddpg(keys[i], env, cfg, st_i, T=T,
-                                 env_params=lanes[i])
+        _, h_i = run_online_agent(keys[i], env, agent, st_i, T=T,
+                                  env_params=lanes[i])
         np.testing.assert_array_equal(h_fleet.rewards[i], h_i.rewards)
         np.testing.assert_array_equal(h_fleet.latencies[i], h_i.latencies)
         np.testing.assert_array_equal(h_fleet.moved[i], h_i.moved)
@@ -203,11 +204,12 @@ def test_broadcast_invariant_fleet_matches_stacked(small_env, ddpg_cfg):
     full = scenarios.build("one_slow_machine", env, F)
     bc = scenarios.build("one_slow_machine", env, F, broadcast_invariant=True)
     assert full.routing.ndim == 3 and bc.routing.ndim == 2
+    agent = make_agent("ddpg", env, cfg=cfg)
     states = ddpg.init_fleet(jax.random.PRNGKey(0), cfg, F)
     keys = jax.random.split(jax.random.PRNGKey(1), F)
-    _, h_full = run_online_fleet(keys, env, cfg, states, T=T,
+    _, h_full = run_online_fleet(keys, env, agent, states, T=T,
                                  env_params=full)
-    _, h_bc = run_online_fleet(keys, env, cfg, states, T=T, env_params=bc)
+    _, h_bc = run_online_fleet(keys, env, agent, states, T=T, env_params=bc)
     # trajectory (actions taken) is identical; measured rewards may differ
     # in the last float32 ulp because XLA lowers a broadcast matmul and a
     # batched matmul differently
@@ -360,6 +362,22 @@ def test_agents_with_equal_configs_are_equal(small_env, ddpg_cfg):
 def test_runner_cache_is_gone():
     assert not hasattr(agent_mod, "_RUNNER_CACHE")
     assert not hasattr(agent_mod, "_compiled_runner")
+
+
+def test_deprecation_window_closed(small_env, ddpg_cfg):
+    """PR-2's compatibility surface is retired: the bare-config wrappers
+    are gone and the runners reject bare configs with a pointed error."""
+    assert not hasattr(agent_mod, "run_online_ddpg")
+    assert not hasattr(agent_mod, "run_online_dqn")
+    assert not hasattr(agent_mod, "as_agent")
+    env, cfg = small_env, ddpg_cfg
+    states = ddpg.init_fleet(jax.random.PRNGKey(0), cfg, 2)
+    keys = jax.random.split(jax.random.PRNGKey(1), 2)
+    with pytest.raises(TypeError, match="make_agent"):
+        run_online_fleet(keys, env, cfg, states, T=2)
+    with pytest.raises(TypeError, match="make_agent"):
+        run_online_agent(keys[0], env, cfg,
+                         jax.tree.map(lambda x: x[0], states), T=2)
 
 
 # --------------------------------------------------------------------------

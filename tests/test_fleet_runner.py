@@ -5,10 +5,9 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import ddpg, dqn
-from repro.core.agent import (run_online_ddpg, run_online_ddpg_python,
-                              run_online_dqn, run_online_dqn_python,
-                              run_online_fleet)
+from repro.core import ddpg, dqn, make_agent
+from repro.core.agent import (run_online_agent, run_online_ddpg_python,
+                              run_online_dqn_python, run_online_fleet)
 from repro.core.ddpg import DDPGConfig
 from repro.core.dqn import DQNConfig
 from repro.dsdps import SchedulingEnv, apps
@@ -27,7 +26,12 @@ def ddpg_cfg(small_env):
                       state_dim=small_env.state_dim, k_nn=4)
 
 
-def test_fleet_bitmatches_sequential_singles(small_env, ddpg_cfg):
+@pytest.fixture(scope="module")
+def ddpg_agent(small_env, ddpg_cfg):
+    return make_agent("ddpg", small_env, cfg=ddpg_cfg)
+
+
+def test_fleet_bitmatches_sequential_singles(small_env, ddpg_cfg, ddpg_agent):
     """fleet=4 in one XLA program == four sequential single-env runs with
     the same per-lane keys and initial states, bit for bit."""
     env, cfg = small_env, ddpg_cfg
@@ -35,15 +39,15 @@ def test_fleet_bitmatches_sequential_singles(small_env, ddpg_cfg):
     states = ddpg.init_fleet(jax.random.PRNGKey(3), cfg, F)
     keys = jax.random.split(jax.random.PRNGKey(11), F)
 
-    _, h_fleet = run_online_fleet(keys, env, cfg, states, T=T,
+    _, h_fleet = run_online_fleet(keys, env, ddpg_agent, states, T=T,
                                   updates_per_epoch=1)
     assert h_fleet.fleet == F
     assert h_fleet.rewards.shape == (F, T)
 
     for i in range(F):
         st_i = jax.tree.map(lambda x: x[i], states)
-        _, h_i = run_online_ddpg(keys[i], env, cfg, st_i, T=T,
-                                 updates_per_epoch=1)
+        _, h_i = run_online_agent(keys[i], env, ddpg_agent, st_i, T=T,
+                                  updates_per_epoch=1)
         np.testing.assert_array_equal(h_fleet.rewards[i], h_i.rewards)
         np.testing.assert_array_equal(h_fleet.latencies[i], h_i.latencies)
         np.testing.assert_array_equal(h_fleet.moved[i], h_i.moved)
@@ -53,7 +57,8 @@ def test_fleet_bitmatches_sequential_singles(small_env, ddpg_cfg):
         np.testing.assert_array_equal(lane.rewards, h_i.rewards)
 
 
-def test_scan_runner_reproduces_python_loop_ddpg(small_env, ddpg_cfg):
+def test_scan_runner_reproduces_python_loop_ddpg(small_env, ddpg_cfg,
+                                                 ddpg_agent):
     """Regression: the jitted scan runner follows the legacy Python loop's
     trace.  Fusing select/step/store/update into one XLA program changes
     float32 rounding at the last ulp, so exact equality is not guaranteed —
@@ -64,8 +69,8 @@ def test_scan_runner_reproduces_python_loop_ddpg(small_env, ddpg_cfg):
     key = jax.random.PRNGKey(7)
     _, h_py = run_online_ddpg_python(key, env, cfg, state, T=12,
                                      updates_per_epoch=2)
-    _, h_sc = run_online_ddpg(key, env, cfg, state, T=12,
-                              updates_per_epoch=2)
+    _, h_sc = run_online_agent(key, env, ddpg_agent, state, T=12,
+                               updates_per_epoch=2)
     np.testing.assert_allclose(h_sc.rewards, h_py.rewards,
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(h_sc.latencies, h_py.latencies,
@@ -82,7 +87,8 @@ def test_scan_runner_reproduces_python_loop_dqn(small_env):
     state = dqn.init_state(jax.random.PRNGKey(0), cfg)
     key = jax.random.PRNGKey(5)
     _, h_py = run_online_dqn_python(key, env, cfg, state, T=12)
-    _, h_sc = run_online_dqn(key, env, cfg, state, T=12)
+    _, h_sc = run_online_agent(key, env, make_agent("dqn", env, cfg=cfg),
+                               state, T=12)
     np.testing.assert_allclose(h_sc.rewards, h_py.rewards,
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(h_sc.moved, h_py.moved)
@@ -97,7 +103,9 @@ def test_fleet_dqn_runs_and_stacks(small_env):
     F, T = 3, 6
     states = dqn.init_fleet(jax.random.PRNGKey(1), cfg, F)
     keys = jax.random.split(jax.random.PRNGKey(2), F)
-    states_out, hist = run_online_fleet(keys, env, cfg, states, T=T)
+    states_out, hist = run_online_fleet(keys, env,
+                                        make_agent("dqn", env, cfg=cfg),
+                                        states, T=T)
     assert hist.rewards.shape == (F, T)
     assert hist.final_assignment.shape == (F, env.N, env.M)
     assert np.isfinite(hist.rewards).all()
@@ -105,7 +113,7 @@ def test_fleet_dqn_runs_and_stacks(small_env):
     assert len({hist.rewards[i].tobytes() for i in range(F)}) == F
 
 
-def test_fleet_straggler_scenarios(small_env, ddpg_cfg):
+def test_fleet_straggler_scenarios(small_env, ddpg_cfg, ddpg_agent):
     """Per-lane straggler speed factors flow through reset_fleet into the
     scan carry: slowed lanes must measure higher latency."""
     env, cfg = small_env, ddpg_cfg
@@ -115,17 +123,17 @@ def test_fleet_straggler_scenarios(small_env, ddpg_cfg):
     speed = np.ones((F, env.M), np.float32)
     speed[1, 0] = 0.25                      # lane 1: machine 0 straggles
     env_states = env.reset_fleet(keys, speed_factors=speed)
-    _, hist = run_online_fleet(keys, env, cfg, states, T=T,
+    _, hist = run_online_fleet(keys, env, ddpg_agent, states, T=T,
                                env_states=env_states)
     assert hist.latencies[1].mean() > hist.latencies[0].mean()
 
 
-def test_history_band_shapes(small_env, ddpg_cfg):
+def test_history_band_shapes(small_env, ddpg_cfg, ddpg_agent):
     env, cfg = small_env, ddpg_cfg
     F, T = 3, 20
     states = ddpg.init_fleet(jax.random.PRNGKey(8), cfg, F)
     keys = jax.random.split(jax.random.PRNGKey(9), F)
-    _, hist = run_online_fleet(keys, env, cfg, states, T=T)
+    _, hist = run_online_fleet(keys, env, ddpg_agent, states, T=T)
     norm = hist.normalized_rewards()
     assert norm.shape == (F, T)
     assert norm.min() >= 0.0 and norm.max() <= 1.0 + 1e-9

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import (DDPGConfig, ddpg_init, jamba_placement_env,
-                        run_online_ddpg)
+                        make_agent, run_online_agent)
 from repro.core import ddpg
 from repro.core.ddpg import offline_pretrain
 from repro.core.exploration import EpsilonSchedule
@@ -28,8 +28,9 @@ def trained_small():
     state = ddpg_init(jax.random.PRNGKey(0), cfg)
     state = offline_pretrain(jax.random.PRNGKey(1), state, cfg, env,
                              n_samples=600, n_updates=200)
-    state, hist = run_online_ddpg(jax.random.PRNGKey(2), env, cfg, state,
-                                  T=150, updates_per_epoch=2)
+    state, hist = run_online_agent(jax.random.PRNGKey(2), env,
+                                   make_agent("ddpg", env, cfg=cfg), state,
+                                   T=150, updates_per_epoch=2)
     return env, cfg, state, hist
 
 
