@@ -6,7 +6,10 @@ stragglers) vmapped through the same one-XLA-program runner.
 ``--sharded`` additionally times the mesh-sharded fleet
 (``run_online_fleet(..., mesh=launch.mesh.make_fleet_mesh())``): the fleet
 axis partitioned over every visible device via shard_map, recorded as
-lane-epochs/sec next to the single-device vmap row.
+lane-epochs/sec next to the single-device vmap row.  ``--lifecycle`` times
+the elastic lane lifecycle (repro/fleet/lifecycle.py) against the fixed
+grid on a plateauing fleet: total lane-epochs executed, the savings
+fraction, elastic-vs-fixed lane-epochs/sec, and the final-reward gap.
 
 The paper's credibility hinges on seed-swept online-learning curves; this
 bench shows why that is now affordable — one vmapped scan executes the
@@ -30,6 +33,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ddpg as ddpg_lib
 from repro.core import make_agent
@@ -52,7 +56,8 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
             baseline_epochs: int = 40,
             scenario_batched: bool = False,
             broadcast_invariant: bool = False,
-            sharded: bool = False) -> list[tuple]:
+            sharded: bool = False,
+            lifecycle: bool = False) -> list[tuple]:
     # the broadcast comparison is a variant OF the scenario-batched fleet
     scenario_batched = scenario_batched or broadcast_invariant
     topo = apps.ALL_APPS[app]()
@@ -161,6 +166,67 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
                      f"vmap_lane_epochs_per_sec={eps_warm:.1f};"
                      f"vs_vmap={eps_sh / eps_warm:.2f}x;"
                      f"devices={n_dev}"))
+
+    if lifecycle:
+        # elastic lane lifecycle vs fixed grid on a PLATEAUING fleet: the
+        # round-robin baseline's reward plateaus by construction, so what
+        # this row measures is the stopping rule's detection latency and
+        # the lane-epochs the compacting runner then refuses to pay —
+        # executed_lane_epochs strictly below the fixed grid with final
+        # eval rewards matching within tolerance (the ISSUE-5 acceptance
+        # contract; the bit-exactness side is pinned in
+        # tests/test_lifecycle.py).
+        from repro.fleet.lifecycle import StopRule, run_online_fleet_elastic
+        rr = make_agent("round_robin", env)
+        rr_states = rr.init_fleet(jax.random.PRNGKey(5), fleet)
+        rule = StopRule(window=max(2, epochs // 16), rel_tol=0.02,
+                        min_epochs=max(4, epochs // 8),
+                        check_every=max(4, epochs // 8))
+        run_online_fleet(keys, env, rr, rr_states, T=epochs)      # compile
+        t0 = time.perf_counter()
+        _, h_fix = run_online_fleet(keys, env, rr, rr_states, T=epochs)
+        dt_fix = time.perf_counter() - t0
+        run_online_fleet_elastic(keys, env, rr, rr_states, epochs,
+                                 rule=rule)                       # compile
+        t0 = time.perf_counter()
+        res = run_online_fleet_elastic(keys, env, rr, rr_states, epochs,
+                                       rule=rule)
+        dt_el = time.perf_counter() - t0
+        eps_fix = fleet * epochs / dt_fix
+        eps_el = res.executed_lane_epochs / dt_el
+        k = max(1, min(rule.window, epochs))
+        gap = float(np.abs(res.history.rewards[:, -k:].mean(axis=1)
+                           - np.asarray(h_fix.rewards)[:, -k:].mean(axis=1)
+                           ).max())
+        rows.append((f"fleet_bench_{app}_lifecycle_f{fleet}_T{epochs}",
+                     dt_el / max(res.executed_lane_epochs, 1) * 1e6,
+                     f"executed_lane_epochs={res.executed_lane_epochs};"
+                     f"fixed_grid_lane_epochs={res.fixed_grid_lane_epochs};"
+                     f"savings={res.savings:.2f};"
+                     f"elastic_lane_epochs_per_sec={eps_el:.1f};"
+                     f"fixed_lane_epochs_per_sec={eps_fix:.1f};"
+                     f"elastic_wall_s={dt_el:.3f};fixed_wall_s={dt_fix:.3f};"
+                     f"final_reward_gap={gap:.5f}"))
+
+        # successive-halving scenario search: how many lane-epochs the
+        # rung/prune/refill discipline spends vs a fixed grid over every
+        # candidate it ever launched
+        from repro.fleet.lifecycle import search_scenarios
+        s_fleet = min(fleet, 8)
+        rung = max(2, epochs // 8)
+        t0 = time.perf_counter()
+        lb = search_scenarios(env, rr, fleet=s_fleet,
+                              rungs=(rung, rung, 2 * rung),
+                              eval_window=max(2, rung // 2), seed=0)
+        dt_s = time.perf_counter() - t0
+        fixed_grid = len(lb.entries) * sum(lb.rungs)
+        rows.append((f"fleet_bench_{app}_search_f{s_fleet}_r{rung}",
+                     dt_s / max(lb.total_lane_epochs, 1) * 1e6,
+                     f"candidates={len(lb.entries)};"
+                     f"total_lane_epochs={lb.total_lane_epochs};"
+                     f"fixed_grid_lane_epochs={fixed_grid};"
+                     f"best_eval_reward={lb.entries[0].score:.4f};"
+                     f"wall_s={dt_s:.3f}"))
     return rows
 
 
@@ -184,12 +250,17 @@ def main() -> None:
                          "over every visible device via shard_map, "
                          "launch.mesh.make_fleet_mesh) and record "
                          "lane-epochs/sec for vmap vs sharded")
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="also time per-lane early stopping + compaction "
+                         "vs the fixed grid on a plateauing fleet and "
+                         "record executed lane-epochs, savings, and the "
+                         "final-reward gap")
     ap.add_argument("--json", default=str(DEFAULT_JSON),
                     help="benchmark JSON artifact path ('' disables)")
     args = ap.parse_args()
     rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
                    args.scenario_batched, args.broadcast_invariant,
-                   args.sharded)
+                   args.sharded, args.lifecycle)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -5,9 +5,12 @@ Layout:  <dir>/step_<N>/
            <leaf-id>.npy       one file per pytree leaf
 
 Design points for 1000+-node operation (DESIGN.md §5):
-  * save is ASYNC: arrays are snapshotted to host memory synchronously
-    (cheap) and written by a background thread — training never blocks on
-    the filesystem;
+  * save is ASYNC and the device→host transfer is OVERLAPPED: the caller
+    thread only dispatches a donation-safe on-device snapshot + async D2H
+    copy per leaf; a background thread completes the transfer and writes
+    — training blocks on neither the interconnect nor the filesystem
+    (double-buffered: at most two snapshots in flight, see
+    AsyncCheckpointer);
   * writes are ATOMIC: a step directory is staged as .tmp and renamed only
     after every leaf + manifest hit disk, so a mid-write failure never
     corrupts the latest checkpoint;
@@ -26,6 +29,7 @@ import threading
 import zlib
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.treepath import keystr_path
@@ -126,11 +130,33 @@ class Checkpointer:
 
 
 class AsyncCheckpointer(Checkpointer):
-    """save_async(): snapshot now, write in the background."""
+    """save_async(): snapshot now, write in the background.
 
-    def __init__(self, directory, keep: int = 3):
+    With ``overlap_transfer=True`` (the default) the device→host transfer
+    itself moves off the caller thread: ``save_async`` dispatches an
+    on-device SNAPSHOT copy per jax leaf (eager ``jnp.copy`` — enqueued
+    on the device stream before any later computation, and never itself
+    donated, so a donating caller like the sharded fleet runner's
+    in-place chunk scan cannot invalidate it), starts its async D2H copy,
+    and hands the snapshot references to the background worker, which
+    blocks on the transfer there and then serializes.  The caller —
+    typically a chunked training loop — dispatches its next chunk
+    immediately, so accelerator meshes keep scanning while the previous
+    chunk's snapshot drains over PCIe/ICI and hits disk.
+
+    The queue is DOUBLE-BUFFERED (``max_inflight=1``): one snapshot being
+    written plus one queued; a third ``save_async`` blocks until the
+    oldest write completes, bounding host memory at ~2 snapshots no matter
+    how fast chunks finish.  ``overlap_transfer=False`` restores the old
+    synchronous-transfer behavior (host copies taken on the caller thread
+    before ``save_async`` returns — needed if the caller mutates buffers
+    in place outside jax's view)."""
+
+    def __init__(self, directory, keep: int = 3,
+                 overlap_transfer: bool = True, max_inflight: int = 1):
         super().__init__(directory, keep)
-        self._q: queue.Queue = queue.Queue()
+        self.overlap_transfer = overlap_transfer
+        self._q: queue.Queue = queue.Queue(maxsize=max(int(max_inflight), 1))
         self._err: list[BaseException] = []
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
@@ -140,8 +166,11 @@ class AsyncCheckpointer(Checkpointer):
             item = self._q.get()
             if item is None:
                 return
-            step, names, host = item
+            step, names, leaves = item
             try:
+                # completes the D2H transfer when leaves are device arrays
+                # (overlap path); no-op copies when already host snapshots
+                host = [np.asarray(jax.device_get(l)) for l in leaves]
                 self._write(step, names, host)
             except BaseException as e:  # surfaced on wait()
                 self._err.append(e)
@@ -151,8 +180,20 @@ class AsyncCheckpointer(Checkpointer):
     def save_async(self, step: int, state) -> None:
         leaves, _ = _flatten(state)
         names = _leaf_paths(state)
-        host = [np.asarray(jax.device_get(l)) for l in leaves]   # snapshot
-        self._q.put((step, names, host))
+        if self.overlap_transfer:
+            payload = []
+            for leaf in leaves:
+                if isinstance(leaf, jax.Array):
+                    # device-side snapshot: ordered after the producing
+                    # computation, independent of the original buffer (a
+                    # later donating dispatch deletes the ORIGINAL, not
+                    # this copy), then start its D2H transfer
+                    leaf = jnp.copy(leaf)
+                    leaf.copy_to_host_async()    # enqueue DMA, don't block
+                payload.append(leaf)
+        else:
+            payload = [np.asarray(jax.device_get(l)) for l in leaves]
+        self._q.put((step, names, payload))      # blocks when 2 in flight
 
     def wait(self) -> None:
         self._q.join()

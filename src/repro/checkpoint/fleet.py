@@ -5,10 +5,21 @@
 runner's carries — per-lane agent states, env states, and PRNG keys —
 tagged by absolute decision epoch.  ``core.agent.run_online_fleet(...,
 checkpoint=ck)`` chunks its epoch scan every ``ck.every`` epochs and calls
-:meth:`FleetCheckpoint.save` after each chunk: arrays are snapshotted to
-host synchronously (cheap) and written by a background thread, and a step
-directory only renames into place once every leaf + manifest hit disk, so
-a kill mid-write never corrupts the newest restorable state.
+:meth:`FleetCheckpoint.save` after each chunk: the device→host transfer is
+OVERLAPPED (the caller only dispatches a donation-safe on-device snapshot
+plus an async D2H copy per leaf; the background writer completes the
+transfer, double-buffered at two snapshots in flight), so accelerator
+meshes keep scanning the next chunk — which donates the live carries —
+while the previous one serializes.  A step directory only renames into place once
+every leaf + manifest hit disk, so a kill mid-write never corrupts the
+newest restorable state.
+
+Elastic-lifecycle runs (repro/fleet/lifecycle.py) COMPACT their fleet as
+lanes converge, so consecutive snapshots can hold different lane counts;
+``save(..., lane_map=...)`` records which ORIGINAL lanes the surviving
+rows are, and ``restore(..., with_lane_map=True)`` recovers that map
+alongside the carries (see docs/elastic_fleets.md for the elastic-restore
+story).
 
 Restore is ELASTIC: :meth:`restore` loads the lane arrays as full host
 arrays and — given a mesh — re-places them with the *current* mesh's
@@ -21,6 +32,8 @@ from __future__ import annotations
 
 import pathlib
 
+import numpy as np
+
 from repro.checkpoint.checkpointer import AsyncCheckpointer, Checkpointer
 
 
@@ -30,30 +43,41 @@ class FleetCheckpoint:
     ``every`` — checkpoint cadence in decision epochs (the runner chunks
     its scan on this boundary); ``keep`` — retained checkpoints (older
     step directories are garbage-collected); ``use_async=False`` swaps
-    the background writer for synchronous writes (tests, final flush)."""
+    the background writer for synchronous writes (tests, final flush);
+    ``overlap_transfer=False`` additionally forces the device→host
+    transfer back onto the caller thread (async writes only)."""
 
     def __init__(self, directory: str | pathlib.Path, every: int = 50,
-                 keep: int = 3, use_async: bool = True):
+                 keep: int = 3, use_async: bool = True,
+                 overlap_transfer: bool = True):
         if every < 1:
             raise ValueError(f"checkpoint cadence must be >= 1, got {every}")
         self.every = int(every)
-        self._ck = (AsyncCheckpointer(directory, keep=keep) if use_async
-                    else Checkpointer(directory, keep=keep))
+        self._ck = (AsyncCheckpointer(directory, keep=keep,
+                                      overlap_transfer=overlap_transfer)
+                    if use_async else Checkpointer(directory, keep=keep))
 
     @property
     def directory(self) -> pathlib.Path:
         return self._ck.dir
 
     @staticmethod
-    def _bundle(agent_states, env_states, keys) -> dict:
-        return {"agent": agent_states, "env": env_states, "keys": keys}
+    def _bundle(agent_states, env_states, keys, lane_map=None) -> dict:
+        bundle = {"agent": agent_states, "env": env_states, "keys": keys}
+        if lane_map is not None:
+            bundle["lanes"] = lane_map
+        return bundle
 
     # -- save ----------------------------------------------------------------
-    def save(self, epoch: int, agent_states, env_states, keys) -> None:
+    def save(self, epoch: int, agent_states, env_states, keys,
+             lane_map=None) -> None:
         """Snapshot the fleet carries at absolute ``epoch`` (async when
-        constructed with ``use_async=True`` — training never blocks on the
-        filesystem; the write publishes atomically)."""
-        bundle = self._bundle(agent_states, env_states, keys)
+        constructed with ``use_async=True`` — training blocks on neither
+        the device→host transfer nor the filesystem; the write publishes
+        atomically).  ``lane_map`` — optional ``[fleet]`` int array naming
+        the ORIGINAL lane each row is (elastic-lifecycle runs compact
+        their fleet between snapshots; plain fleet runs omit it)."""
+        bundle = self._bundle(agent_states, env_states, keys, lane_map)
         if isinstance(self._ck, AsyncCheckpointer):
             self._ck.save_async(epoch, bundle)
         else:
@@ -78,7 +102,7 @@ class FleetCheckpoint:
         return self._ck.latest_step()
 
     def restore(self, agent_states, env_states, keys, epoch: int | None = None,
-                mesh=None):
+                mesh=None, with_lane_map: bool = False):
         """Load the carries saved at ``epoch`` (default: latest).
 
         ``agent_states`` / ``env_states`` / ``keys`` supply the target tree
@@ -88,15 +112,26 @@ class FleetCheckpoint:
         replication fallback when the fleet no longer divides the device
         count) — the elastic path that lets a run resume after the device
         count changed.  Returns ``(epoch, agent_states, env_states,
-        keys)``."""
+        keys)``.
+
+        ``with_lane_map=True`` reads a snapshot written by an
+        elastic-lifecycle run (``save(..., lane_map=...)``): the structure
+        templates then describe the COMPACTED (surviving) fleet, and the
+        return grows a fifth element — the ``[fleet]`` original-lane index
+        array."""
         self.wait()                       # flush our own pending writes
         epoch = self.latest_epoch() if epoch is None else epoch
         if epoch is None:
             raise FileNotFoundError(f"no fleet checkpoints in {self.directory}")
-        like = self._bundle(agent_states, env_states, keys)
+        like = self._bundle(agent_states, env_states, keys,
+                            lane_map=(np.zeros(1, np.int32)
+                                      if with_lane_map else None))
         shardings = None
         if mesh is not None:
             from repro.sharding.fleet import fleet_shardings
             shardings = fleet_shardings(mesh, like)
         out = self._ck.restore(like, step=epoch, shardings=shardings)
+        if with_lane_map:
+            return (epoch, out["agent"], out["env"], out["keys"],
+                    np.asarray(out["lanes"]))
         return epoch, out["agent"], out["env"], out["keys"]

@@ -31,8 +31,15 @@ Three execution paths:
     Passing ``checkpoint=`` (a
     :class:`repro.checkpoint.fleet.FleetCheckpoint`) chunks the epoch
     scan every ``checkpoint.every`` epochs and atomically snapshots the
-    carries in the background, so long heterogeneous-scenario runs
-    survive restarts and device-count changes (docs/sharded_fleets.md).
+    carries in the background — the device→host transfer itself runs off
+    the caller thread, so the mesh keeps scanning while the previous
+    chunk serializes — and long heterogeneous-scenario runs survive
+    restarts and device-count changes (docs/sharded_fleets.md).  Passing
+    ``lifecycle=`` (a :class:`repro.fleet.lifecycle.StopRule`) makes the
+    fleet ELASTIC: lanes whose smoothed reward plateaus stop early and
+    the surviving lanes are compacted into a smaller fleet between
+    chunks, so converged scenarios stop paying compute
+    (docs/elastic_fleets.md).
 
 Executable caching is jit's own: the env spec and the Agent bundle are
 hashable static arguments of module-level jitted programs, and EnvParams
@@ -229,6 +236,73 @@ _fleet_program_sharded_donated = jax.jit(_sharded_fleet_fn,
                                          donate_argnums=(0, 1, 2))
 
 
+def run_fleet_chunk(keys, states, env_states, env_params, *, env,
+                    agent: Agent, T: int, updates_per_epoch: int,
+                    explore: bool, params_axes, mesh=None, params_specs=None):
+    """One chunk of the fleet epoch scan: the shared execution primitive
+    behind ``run_online_fleet``'s checkpoint chunking and the elastic lane
+    lifecycle's stop-check boundaries (repro/fleet/lifecycle.py).
+
+    The inputs must already be placed (``sharding.fleet.shard_fleet``) when
+    ``mesh`` is given; ``params_specs`` is the hashable PartitionSpec tree
+    that placement returned.  On accelerator meshes the carries are DONATED
+    — slice anything you still need out of them (e.g. a stopped lane's
+    final state) before calling again.  Returns the evolved carries plus
+    the ``[fleet, T]`` traces: ``(states, env_states, keys, rewards,
+    latencies, moved)``."""
+    common = dict(env=env, agent=agent, T=int(T),
+                  updates_per_epoch=int(updates_per_epoch),
+                  explore=bool(explore), params_axes=params_axes)
+    if mesh is not None:
+        donate = mesh.devices.flat[0].platform != "cpu"
+        program = (_fleet_program_sharded_donated if donate
+                   else _fleet_program_sharded)
+        common.update(mesh=mesh, params_specs=params_specs)
+    else:
+        program = _fleet_program
+    return program(keys, states, env_states, env_params, **common)
+
+
+def chunk_schedule(T: int, every: int | None) -> list[int]:
+    """Chunk lengths for a ``T``-epoch scan cut every ``every`` epochs
+    (trailing partial chunk included); ``[T]`` when ``every`` is falsy."""
+    if not every:
+        return [T]
+    chunks = [every] * (T // every)
+    if T % every:
+        chunks.append(T % every)
+    return chunks
+
+
+def prepare_fleet(keys, env, states, env_states, env_params, mesh):
+    """The fleet runners' shared setup preamble: default-params /
+    ``params_axes`` resolution, the env-reset key split, and mesh
+    placement.  The elastic runner's loss-free bit-match contract depends
+    on this staying IDENTICAL between the fixed-grid and elastic entry
+    points, which is why it is one function.
+
+    Returns ``(keys, states, env_states, env_params, ref, params_axes,
+    params_specs)``."""
+    keys = jnp.asarray(keys)
+    ref = env.default_params()
+    if env_params is None:
+        env_params = ref
+        params_axes = None
+    else:
+        from repro.dsdps.simulator import params_in_axes
+        params_axes = params_in_axes(env_params, ref)
+    if env_states is None:
+        pairs = jax.vmap(jax.random.split)(keys)          # [F, 2] keys
+        k_env, keys = pairs[:, 0], pairs[:, 1]
+        env_states = reset_fleet_states(k_env, env, env_params)
+    params_specs = None
+    if mesh is not None:
+        keys, states, env_states, env_params, params_specs = shard_fleet(
+            mesh, keys, states, env_states, env_params, ref)
+    return keys, states, env_states, env_params, ref, params_axes, \
+        params_specs
+
+
 def _run_single(key, env, agent, state, T, updates_per_epoch, explore,
                 env_params=None):
     agent = _require_agent(agent)
@@ -302,6 +376,7 @@ def run_online_fleet(
     mesh=None,
     checkpoint=None,
     start_epoch: int = 0,
+    lifecycle=None,
 ):
     """Fleet-batched online learning: one XLA program for [fleet] runs.
 
@@ -350,52 +425,40 @@ def run_online_fleet(
     ``start_epoch`` — absolute epoch this call starts at (resume offset):
                  only affects checkpoint numbering.  ``T`` is always the
                  number of epochs executed BY THIS CALL.
+    ``lifecycle`` — optional :class:`repro.fleet.lifecycle.StopRule`: lanes
+                 whose smoothed reward plateaus stop early and the fleet is
+                 COMPACTED between chunks so finished lanes stop paying
+                 compute (docs/elastic_fleets.md).  Stopped lanes' trace
+                 tails are padded with their final value; use
+                 :func:`repro.fleet.lifecycle.run_online_fleet_elastic`
+                 directly for the per-lane stop epochs and the
+                 executed-lane-epoch accounting.
 
     Returns (stacked agent states, History with [fleet, T] traces)."""
     agent = _require_agent(agent)
     T = int(T)
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
-    keys = jnp.asarray(keys)
-    ref = env.default_params()
-    if env_params is None:
-        env_params = ref
-        params_axes = None
-    else:
-        from repro.dsdps.simulator import params_in_axes
-        params_axes = params_in_axes(env_params, ref)
-    if env_states is None:
-        pairs = jax.vmap(jax.random.split)(keys)          # [F, 2] keys
-        k_env, keys = pairs[:, 0], pairs[:, 1]
-        env_states = reset_fleet_states(k_env, env, env_params)
-
-    common = dict(env=env, agent=agent,
-                  updates_per_epoch=int(updates_per_epoch),
-                  explore=bool(explore), params_axes=params_axes)
-    if mesh is not None:
-        keys, states, env_states, env_params, params_specs = shard_fleet(
-            mesh, keys, states, env_states, env_params, ref)
-        donate = mesh.devices.flat[0].platform != "cpu"
-        program = (_fleet_program_sharded_donated if donate
-                   else _fleet_program_sharded)
-        common.update(mesh=mesh, params_specs=params_specs)
-    else:
-        program = _fleet_program
+    if lifecycle is not None:
+        from repro.fleet.lifecycle import run_online_fleet_elastic
+        result = run_online_fleet_elastic(
+            keys, env, agent, states, T, rule=lifecycle,
+            updates_per_epoch=updates_per_epoch, explore=explore,
+            env_states=env_states, env_params=env_params, mesh=mesh,
+            checkpoint=checkpoint, start_epoch=start_epoch)
+        return result.states, result.history
+    keys, states, env_states, env_params, _, params_axes, params_specs = \
+        prepare_fleet(keys, env, states, env_states, env_params, mesh)
 
     every = getattr(checkpoint, "every", None) if checkpoint is not None \
         else None
-    if every:
-        chunks = [every] * (T // every)
-        if T % every:
-            chunks.append(T % every)
-    else:
-        chunks = [T]
-
     epoch = int(start_epoch)
     r_parts, l_parts, m_parts = [], [], []
-    for n in chunks:
-        states, env_states, keys, rewards, lats, moved = program(
-            keys, states, env_states, env_params, T=n, **common)
+    for n in chunk_schedule(T, every):
+        states, env_states, keys, rewards, lats, moved = run_fleet_chunk(
+            keys, states, env_states, env_params, env=env, agent=agent,
+            T=n, updates_per_epoch=updates_per_epoch, explore=explore,
+            params_axes=params_axes, mesh=mesh, params_specs=params_specs)
         r_parts.append(np.asarray(rewards))
         l_parts.append(np.asarray(lats))
         m_parts.append(np.asarray(moved))

@@ -131,6 +131,49 @@ def build_for(env, name: str, fleet: int, broadcast_invariant: bool = False,
                                     **kwargs)
 
 
+def sample_perturbed(env, key: jax.Array, base=None,
+                     service_sigma: float = 0.12, rate_sigma: float = 0.12,
+                     straggler_prob: float = 0.25,
+                     straggler_factor: float = 0.4):
+    """ONE perturbed scenario around ``base`` (default: the env's declared
+    parameters) — the candidate sampler of the successive-halving scenario
+    search (``repro.fleet.lifecycle.search_scenarios``): lognormal jitter
+    on the true service costs and arrival rates, plus a random straggler
+    with probability ``straggler_prob``.  Dispatches both env families
+    like :func:`build_for` (placement envs jitter routing skew and total
+    load instead)."""
+    if hasattr(env, "topo"):        # DSDPS scheduling env
+        p = env.default_params() if base is None else base
+        k_svc, k_rate, k_slow, k_m = jax.random.split(key, 4)
+        lane = perturb_rates(perturb_service(p, k_svc, service_sigma),
+                             k_rate, rate_sigma)
+        if bool(jax.random.bernoulli(k_slow, straggler_prob)):
+            lane = with_straggler(lane,
+                                  int(jax.random.randint(k_m, (), 0, env.M)),
+                                  straggler_factor)
+        return lane
+    from repro.core import placement
+    p = env.default_params() if base is None else base
+    k_skew, k_load, k_slow, k_d = jax.random.split(key, 4)
+    lane = placement.perturb_skew(p, k_skew, service_sigma)
+    load = jnp.exp(jax.random.normal(k_load) * rate_sigma
+                   - 0.5 * rate_sigma ** 2)
+    lane = placement.scale_load(lane, load)
+    if bool(jax.random.bernoulli(k_slow, straggler_prob)):
+        lane = placement.with_device_straggler(
+            lane, int(jax.random.randint(k_d, (), 0, env.M)),
+            straggler_factor)
+    return lane
+
+
+def perturb_sampler(env, base=None, **kwargs):
+    """Curry :func:`sample_perturbed` into the ``perturb(key) -> params``
+    callable ``search_scenarios`` consumes for rung refills."""
+    def sample(key: jax.Array):
+        return sample_perturbed(env, key, base=base, **kwargs)
+    return sample
+
+
 def scenario_names(env) -> tuple[str, ...]:
     """Names valid for ``build_for(env, ...)``."""
     if hasattr(env, "topo"):

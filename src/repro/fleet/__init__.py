@@ -1,0 +1,11 @@
+# Elastic lane lifecycle for scenario fleets: per-lane early stopping,
+# between-chunk lane compaction, and successive-halving scenario search.
+from repro.fleet.lifecycle import (ElasticResult, Leaderboard, ScenarioEntry,
+                                   StopRule, compact_lanes, plateau_converged,
+                                   run_online_fleet_elastic, search_scenarios)
+
+__all__ = [
+    "ElasticResult", "Leaderboard", "ScenarioEntry", "StopRule",
+    "compact_lanes", "plateau_converged", "run_online_fleet_elastic",
+    "search_scenarios",
+]

@@ -24,6 +24,14 @@ run restarted with ``--resume`` picks up from the newest checkpoint,
 re-placed against the current mesh (device counts may differ between
 save and restore).  See docs/sharded_fleets.md.
 
+Budget-aware fleets (docs/elastic_fleets.md): ``--early-stop`` attaches
+the elastic lane lifecycle — lanes whose smoothed reward plateaus stop
+early and the fleet compacts so converged scenarios stop paying compute —
+and ``--scenario-search`` swaps training for a successive-halving search
+over perturbed scenarios (wide fleet, bottom half pruned at each rung,
+freed lanes refilled), writing the ranked leaderboard to
+``--search-json``.
+
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
       --offline 2000 --epochs 300 --fleet 8
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
@@ -32,6 +40,8 @@ save and restore).  See docs/sharded_fleets.md.
       --scenario one_slow_device
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
       --fleet 8 --sharded --checkpoint-dir /tmp/fleet_ck --resume
+  PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
+      --scenario-search --fleet 8 --search-rungs 16,16,32
 """
 from __future__ import annotations
 
@@ -97,12 +107,43 @@ def main() -> None:
                     help="resume from the newest checkpoint in "
                          "--checkpoint-dir (re-placed against the current "
                          "mesh) instead of starting fresh")
+    ap.add_argument("--early-stop", action="store_true",
+                    help="elastic lane lifecycle: stop lanes whose smoothed "
+                         "reward plateaus and compact the fleet so "
+                         "converged scenarios stop paying compute "
+                         "(repro.fleet.lifecycle, docs/elastic_fleets.md)")
+    ap.add_argument("--scenario-search", action="store_true",
+                    help="successive-halving search over perturbed "
+                         "scenarios instead of training: --fleet "
+                         "candidates seeded from --scenario (default "
+                         "mixed), bottom half pruned at each rung, freed "
+                         "lanes refilled; prints and saves the ranked "
+                         "leaderboard")
+    ap.add_argument("--search-rungs", default="16,16,32",
+                    help="comma-separated epochs per successive-halving "
+                         "rung")
+    ap.add_argument("--search-json", default="artifacts/scenario_search.json",
+                    help="leaderboard artifact path for --scenario-search")
     args = ap.parse_args()
     if args.fleet < 1:
         ap.error("--fleet must be >= 1")
     if args.agent == "model_based" and args.app == "placement":
         ap.error("model_based profiles a DSDPS cluster; use it with the "
                  "Storm apps")
+    if args.early_stop and args.resume:
+        ap.error("--early-stop checkpoints a compacted fleet; resuming one "
+                 "needs FleetCheckpoint.restore(..., with_lane_map=True) — "
+                 "not wired into --resume yet (see docs/elastic_fleets.md)")
+    if args.scenario_search:
+        for flag, on in (("--sharded", args.sharded),
+                         ("--checkpoint-dir", args.checkpoint_dir),
+                         ("--resume", args.resume),
+                         ("--early-stop", args.early_stop)):
+            if on:
+                ap.error(f"--scenario-search does not support {flag}: the "
+                         f"search runs its own un-sharded, un-checkpointed "
+                         f"rung fleets (--offline/--epochs are ignored too "
+                         f"— rung lengths come from --search-rungs)")
 
     env = build_env(args.app)
     if args.scenario and args.scenario not in scenarios.scenario_names(env):
@@ -112,6 +153,27 @@ def main() -> None:
     overrides = {"k_nn": args.k} if args.agent == "ddpg" else {}
     agent = make_agent(args.agent, env, **overrides)
     key = jax.random.PRNGKey(args.seed)
+
+    if args.scenario_search:
+        from repro.fleet.lifecycle import search_scenarios
+        rungs = tuple(int(x) for x in args.search_rungs.split(",") if x)
+        if args.fleet < 2:
+            ap.error("--scenario-search needs --fleet >= 2")
+        print(f"successive-halving scenario search: {args.fleet} candidates "
+              f"seeded from {args.scenario or 'mixed'!r}, rungs {rungs} ...")
+        lb = search_scenarios(env, agent,
+                              scenario=args.scenario or "mixed",
+                              fleet=args.fleet, rungs=rungs, seed=args.seed)
+        print(f"\nrank  cand  rung  epochs  eval_reward  survived")
+        for rank, e in enumerate(lb.entries):
+            print(f"{rank:4d}  {e.cand:4d}  {e.rung:4d}  {e.epochs:6d}  "
+                  f"{e.score:11.4f}  {e.survived}")
+        print(f"\ntotal lane-epochs executed: {lb.total_lane_epochs} "
+              f"(fixed grid over every candidate would be "
+              f"{len(lb.entries) * sum(rungs)})")
+        path = lb.save(args.search_json)
+        print(f"wrote {path}")
+        return
     env_params = (scenarios.build_for(
         env, args.scenario, args.fleet,
         broadcast_invariant=args.broadcast_invariant)
@@ -163,13 +225,26 @@ def main() -> None:
     scen = f" ({args.scenario} scenario fleet)" if args.scenario else ""
     where = (f" sharded over {mesh.devices.size} devices" if mesh is not None
              else "")
+    stop = " with per-lane early stopping" if args.early_stop else ""
     print(f"online learning: {args.agent} fleet of {args.fleet} x "
           f"{args.epochs - start_epoch} decision epochs in one batched "
-          f"scan{scen}{where} ...")
-    states, hist = run_online_fleet(
-        keys, env, agent, states, T=args.epochs - start_epoch,
-        env_params=env_params, env_states=env_states, mesh=mesh,
-        checkpoint=ck, start_epoch=start_epoch)
+          f"scan{scen}{where}{stop} ...")
+    if args.early_stop:
+        from repro.fleet.lifecycle import StopRule, run_online_fleet_elastic
+        result = run_online_fleet_elastic(
+            keys, env, agent, states, T=args.epochs - start_epoch,
+            rule=StopRule(), env_params=env_params, env_states=env_states,
+            mesh=mesh, checkpoint=ck, start_epoch=start_epoch)
+        states, hist = result.states, result.history
+        print(f"early stopping: per-lane epochs {result.epochs_run.tolist()} "
+              f"— {result.executed_lane_epochs} lane-epochs executed vs "
+              f"{result.fixed_grid_lane_epochs} fixed-grid "
+              f"({result.savings:.0%} saved)")
+    else:
+        states, hist = run_online_fleet(
+            keys, env, agent, states, T=args.epochs - start_epoch,
+            env_params=env_params, env_states=env_states, mesh=mesh,
+            checkpoint=ck, start_epoch=start_epoch)
     if ck is not None:
         ck.close()
 

@@ -83,6 +83,20 @@ def params_partition_specs(params, ref, mesh: Mesh):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def compaction_size(n_live: int, mesh: Mesh | None) -> int:
+    """Smallest lane count ≥ ``n_live`` a compacted fleet may shrink to.
+
+    ``shard_map`` partitions the fleet axis evenly, so on a mesh the
+    elastic lane lifecycle (repro/fleet/lifecycle.py) can only compact to
+    multiples of the data-axis device count — the gap is padded with
+    already-stopped "passenger" lanes whose extra epochs are discarded.
+    Without a mesh (plain vmap) any size works and this is ``n_live``."""
+    if mesh is None:
+        return int(n_live)
+    n = fleet_size(mesh)
+    return int(-(-int(n_live) // n) * n)          # ceil to a multiple of n
+
+
 def shard_fleet(mesh: Mesh, keys, states, env_states, env_params, ref):
     """Place the fleet runner's carries on ``mesh``.
 

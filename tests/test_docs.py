@@ -1,12 +1,13 @@
 """Documentation health: the README/docs suite stays truthful.
 
 Tier-1 runs the intra-repo link check and parses (but does not execute)
-the README quickstart; the CI docs job additionally executes the
-quickstart under JAX_PLATFORMS=cpu (tools/docs_check.py
---run-quickstart)."""
+every registered executable example; the CI docs job additionally
+executes them under JAX_PLATFORMS=cpu (tools/docs_check.py
+--run-examples)."""
 import pathlib
 
-from tools.docs_check import check_links, extract_quickstart, markdown_files
+from tools.docs_check import (EXECUTABLE_DOCS, check_links, extract_example,
+                              extract_quickstart, markdown_files)
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
@@ -15,12 +16,21 @@ def test_docs_suite_exists():
     assert (REPO / "README.md").exists()
     assert (REPO / "docs" / "core_api.md").exists()
     assert (REPO / "docs" / "sharded_fleets.md").exists()
-    assert len(markdown_files()) >= 3
+    assert (REPO / "docs" / "elastic_fleets.md").exists()
+    assert (REPO / "docs" / "benchmarks.md").exists()
+    assert len(markdown_files()) >= 5
 
 
 def test_no_broken_intra_repo_links():
     broken = check_links()
     assert not broken, f"broken markdown links: {broken}"
+
+
+def test_registered_examples_parse():
+    assert "docs/elastic_fleets.md" in EXECUTABLE_DOCS
+    for rel in EXECUTABLE_DOCS:
+        src = extract_example(rel)
+        compile(src, rel, "exec")                     # SyntaxError = fail
 
 
 def test_quickstart_block_parses_and_uses_v1_api():
@@ -31,3 +41,10 @@ def test_quickstart_block_parses_and_uses_v1_api():
     assert "run_online_ddpg" not in src
     # ~15 lines as promised by ISSUE 4 (allow a little slack for comments)
     assert len([ln for ln in src.splitlines() if ln.strip()]) <= 20
+
+
+def test_elastic_example_uses_the_lifecycle_api():
+    src = extract_example("docs/elastic_fleets.md")
+    assert "StopRule" in src and "run_online_fleet_elastic" in src
+    # stays inside the CI-executed budget (a quickstart-sized snippet)
+    assert len([ln for ln in src.splitlines() if ln.strip()]) <= 25

@@ -128,6 +128,35 @@ def test_scenario_fleet_checkpoint_roundtrip(tmp_path, small_env, ddpg_agent):
         assert isinstance(leaf, jax.Array)    # re-placed on the mesh
 
 
+def test_overlapped_save_survives_buffer_deletion(tmp_path):
+    """The overlapped transfer path must snapshot on-device BEFORE the
+    caller's next donating dispatch can invalidate the carries: deleting
+    the original buffer right after save_async (what donation does on
+    accelerator meshes) must not corrupt or fail the background write."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.checkpoint.checkpointer import AsyncCheckpointer
+
+    ck = AsyncCheckpointer(tmp_path)
+    assert ck.overlap_transfer
+    x = jnp.arange(8.0)
+    orig_write = ck._write
+
+    def slow_write(*a, **k):           # deletion wins the race every time
+        time.sleep(0.2)
+        return orig_write(*a, **k)
+
+    ck._write = slow_write
+    ck.save_async(1, {"x": x})
+    x.delete()                         # donation's effect on the original
+    ck.wait()                          # raises if the worker saw a dead buf
+    out = ck.restore({"x": jnp.zeros(8)}, step=1)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(8.0))
+    ck.close()
+
+
 def test_restore_empty_dir_raises(tmp_path, small_env, ddpg_agent,
                                   fleet_inputs):
     _, states, keys = fleet_inputs

@@ -1,0 +1,286 @@
+"""Elastic lane lifecycle (repro/fleet/lifecycle.py) + History helpers.
+
+The ISSUE-5 acceptance gates: a lane whose reward plateaus stops within
+one chunk of the plateau becoming visible to the rule, and compaction is
+loss-free — on the host mesh, surviving lanes of a compacted run
+bit-match the same lanes of the uncompacted fixed-grid run."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import History, make_agent
+from repro.core.agent import run_online_fleet
+from repro.dsdps import SchedulingEnv, apps, scenarios
+from repro.dsdps.apps import default_workload
+from repro.fleet.lifecycle import (StopRule, compact_lanes,
+                                   plateau_converged,
+                                   run_online_fleet_elastic,
+                                   search_scenarios)
+
+
+@pytest.fixture(scope="module")
+def small_env():
+    topo = apps.continuous_queries("small")
+    return SchedulingEnv(topo, default_workload(topo))
+
+
+@pytest.fixture(scope="module")
+def rr_agent(small_env):
+    return make_agent("round_robin", small_env)
+
+
+# --------------------------------------------------------------------------
+# History helpers
+# --------------------------------------------------------------------------
+def _fleet_history(F=3, T=40, seed=0):
+    rng = np.random.default_rng(seed)
+    rewards = rng.normal(-2.0, 0.1, (F, T)).astype(np.float32)
+    return History(rewards=rewards,
+                   latencies=-rewards,
+                   moved=np.zeros((F, T), np.float32),
+                   final_assignment=np.zeros((F, 4, 2), np.float32))
+
+
+def test_history_lane_slices_one_run():
+    h = _fleet_history()
+    assert h.fleet == 3
+    lane1 = h.lane(1)
+    assert lane1.fleet is None
+    np.testing.assert_array_equal(lane1.rewards, h.rewards[1])
+    np.testing.assert_array_equal(lane1.final_assignment,
+                                  h.final_assignment[1])
+    with pytest.raises(ValueError):
+        lane1.lane(0)
+
+
+def test_history_normalized_rewards_per_lane():
+    h = _fleet_history()
+    norm = h.normalized_rewards()
+    assert norm.shape == h.rewards.shape
+    assert np.all(norm >= 0.0) and np.all(norm <= 1.0)
+    # per-lane normalization: every lane spans [0, 1]
+    np.testing.assert_allclose(norm.min(axis=1), 0.0, atol=1e-7)
+    np.testing.assert_allclose(norm.max(axis=1), 1.0, atol=1e-7)
+    # monotone map of the raw rewards within a lane
+    order_raw = np.argsort(h.rewards[0])
+    np.testing.assert_array_equal(order_raw, np.argsort(norm[0]))
+
+
+def test_history_seed_band_shapes_and_flat_band():
+    h = _fleet_history()
+    mean, std = h.seed_band()
+    assert mean.shape == (h.rewards.shape[1],)
+    assert std.shape == mean.shape
+    assert np.all(std >= 0.0)
+    # identical lanes -> zero band
+    same = History(rewards=np.tile(h.rewards[:1], (3, 1)),
+                   latencies=h.latencies, moved=h.moved,
+                   final_assignment=h.final_assignment)
+    _, std0 = same.seed_band()
+    np.testing.assert_allclose(std0, 0.0, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Stopping rule
+# --------------------------------------------------------------------------
+def test_plateau_rule_flat_stops_improving_does_not():
+    rule = StopRule(window=4, rel_tol=0.01)
+    recent = np.zeros((3, 8), np.float32)
+    recent[0] = -2.0                                  # flat -> plateau
+    recent[1] = np.linspace(-3.0, -1.0, 8)            # improving -> run on
+    recent[2] = np.linspace(-1.0, -3.0, 8)            # degrading -> plateau
+    done = np.asarray(plateau_converged(jax.numpy.asarray(recent), rule))
+    assert done.tolist() == [True, False, True]
+
+
+def test_plateau_rule_single_lane_shape():
+    rule = StopRule(window=2)
+    done = plateau_converged(jax.numpy.zeros(4), rule)
+    assert bool(done)
+
+
+def test_stoprule_warmup():
+    assert StopRule(window=8, min_epochs=4).warmup == 16
+    assert StopRule(window=2, min_epochs=10).warmup == 10
+
+
+# --------------------------------------------------------------------------
+# Early stopping + compaction
+# --------------------------------------------------------------------------
+def test_plateaued_lane_stops_within_one_chunk(small_env, rr_agent):
+    """Round-robin lanes plateau from epoch 0; the rule must fire at the
+    FIRST boundary past its warmup — one chunk after the plateau is
+    observable, not later."""
+    F, T = 3, 16
+    rule = StopRule(window=2, rel_tol=0.05, min_epochs=4, check_every=4)
+    states = rr_agent.init_fleet(jax.random.PRNGKey(0), F)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    res = run_online_fleet_elastic(keys, small_env, rr_agent, states, T,
+                                   rule=rule)
+    assert res.epochs_run.tolist() == [rule.warmup] * F
+    assert res.executed_lane_epochs == F * rule.warmup
+    assert res.executed_lane_epochs < res.fixed_grid_lane_epochs
+    assert 0.0 < res.savings < 1.0
+    # padded tails repeat the final reward
+    np.testing.assert_array_equal(
+        res.history.rewards[:, rule.warmup:],
+        np.repeat(res.history.rewards[:, rule.warmup - 1:rule.warmup],
+                  T - rule.warmup, axis=1))
+
+
+def test_compacted_run_bitmatches_fixed_grid(small_env):
+    """The loss-free contract on the host mesh: force lane 1 to stop at
+    the first boundary (real compaction, 3 -> 2 lanes) and the surviving
+    lanes' full trajectories + final agent states must bit-match the
+    uncompacted fixed-grid run; the stopped lane's prefix must too."""
+    env = small_env
+    agent = make_agent("ddpg", env, k_nn=4)
+    F, T, stop_at = 3, 12, 4
+    params = scenarios.build("one_slow_machine", env, F,
+                             broadcast_invariant=True)
+    states = agent.init_fleet(jax.random.PRNGKey(2), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(3), F)
+    s_fix, h_fix = run_online_fleet(keys, env, agent, states, T=T,
+                                    env_params=params)
+
+    def stop_lane1(rewards_so_far, t):
+        done = np.zeros(rewards_so_far.shape[0], bool)
+        if t == stop_at:
+            done[1] = True
+        return done
+
+    res = run_online_fleet_elastic(keys, env, agent, states, T,
+                                   rule=StopRule(check_every=stop_at),
+                                   env_params=params, stop_fn=stop_lane1)
+    assert res.epochs_run.tolist() == [T, stop_at, T]
+    assert res.executed_lane_epochs == F * stop_at + 2 * (T - stop_at)
+    # surviving lanes: full-trace and final-state bit-match
+    for lane in (0, 2):
+        np.testing.assert_array_equal(res.history.rewards[lane],
+                                      h_fix.rewards[lane])
+        np.testing.assert_array_equal(res.history.moved[lane],
+                                      h_fix.moved[lane])
+        np.testing.assert_array_equal(res.history.final_assignment[lane],
+                                      h_fix.final_assignment[lane])
+    for a, b in zip(jax.tree.leaves(res.states), jax.tree.leaves(s_fix)):
+        np.testing.assert_array_equal(np.asarray(a)[[0, 2]],
+                                      np.asarray(b)[[0, 2]])
+    # the stopped lane's prefix is the fixed-grid prefix
+    np.testing.assert_array_equal(res.history.rewards[1, :stop_at],
+                                  h_fix.rewards[1, :stop_at])
+
+
+def test_all_lanes_stopping_ends_the_run(small_env, rr_agent):
+    F, T = 2, 20
+    states = rr_agent.init_fleet(jax.random.PRNGKey(4), F)
+    keys = jax.random.split(jax.random.PRNGKey(5), F)
+
+    def stop_all(rewards_so_far, t):
+        return np.ones(rewards_so_far.shape[0], bool)
+
+    res = run_online_fleet_elastic(keys, small_env, rr_agent, states, T,
+                                   rule=StopRule(check_every=5),
+                                   stop_fn=stop_all)
+    assert res.epochs_run.tolist() == [5, 5]
+    assert res.executed_lane_epochs == F * 5
+    assert res.history.rewards.shape == (F, T)
+
+
+def test_compact_lanes_keeps_broadcast_invariant_leaves(small_env):
+    env = small_env
+    ref = env.default_params()
+    params = scenarios.build("one_slow_machine", env, 4,
+                             broadcast_invariant=True)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    env_states = env.reset_fleet(keys, params=params)
+    states = jax.numpy.arange(4.0)
+    k2, s2, e2, p2 = compact_lanes([0, 2], keys, states, env_states,
+                                   params, ref)
+    assert k2.shape[0] == 2 and s2.shape[0] == 2 and e2.X.shape[0] == 2
+    # stacked leaf gathered, invariant leaf untouched (still unstacked)
+    assert p2.speed.shape == (2,) + ref.speed.shape
+    assert p2.routing.shape == ref.routing.shape
+    np.testing.assert_array_equal(np.asarray(p2.speed),
+                                  np.asarray(params.speed)[[0, 2]])
+
+
+# --------------------------------------------------------------------------
+# Successive-halving scenario search
+# --------------------------------------------------------------------------
+def test_search_scenarios_leaderboard(small_env, rr_agent):
+    fleet, rungs = 4, (3, 3)
+    lb = search_scenarios(small_env, rr_agent, fleet=fleet, rungs=rungs,
+                          eval_window=2, seed=0)
+    # refill keeps the fleet wide: fleet launched + fleet/2 refills
+    assert len(lb.entries) == fleet + fleet // 2
+    assert lb.total_lane_epochs == fleet * sum(rungs)
+    # ranked best-first by eval reward
+    scores = [e.score for e in lb.entries]
+    assert scores == sorted(scores, reverse=True)
+    assert all(np.isfinite(s) for s in scores)
+    # half the first rung's candidates were pruned after rung 1
+    pruned = [e for e in lb.entries if not e.survived]
+    assert len(pruned) == fleet // 2
+    assert all(e.rung == 1 for e in pruned)
+    # every candidate's params are available for curriculum reuse
+    for e in lb.entries:
+        assert e.cand in lb.params
+    js = lb.to_json()
+    assert js["rungs"] == list(rungs)
+    assert len(js["leaderboard"]) == len(lb.entries)
+
+
+def test_search_rejects_tiny_fleet(small_env, rr_agent):
+    with pytest.raises(ValueError):
+        search_scenarios(small_env, rr_agent, fleet=1, rungs=(2,))
+
+
+# --------------------------------------------------------------------------
+# Elastic restore: lane_map roundtrip + the reworked resume_after_failure
+# --------------------------------------------------------------------------
+def test_elastic_checkpoint_lane_map_and_resume(tmp_path, small_env,
+                                                rr_agent):
+    from repro.checkpoint.fleet import FleetCheckpoint
+    from repro.fault.elastic import resume_after_failure
+
+    env, agent = small_env, rr_agent
+    F, T = 3, 12
+    states = agent.init_fleet(jax.random.PRNGKey(6), F)
+    keys = jax.random.split(jax.random.PRNGKey(7), F)
+    ck = FleetCheckpoint(tmp_path, every=4, keep=10)
+
+    def stop_lane0(rewards_so_far, t):
+        done = np.zeros(rewards_so_far.shape[0], bool)
+        if t == 4:
+            done[0] = True
+        return done
+
+    run_online_fleet_elastic(keys, env, agent, states, T,
+                             rule=StopRule(check_every=4), checkpoint=ck,
+                             stop_fn=stop_lane0)
+    ck.wait()
+    assert ck.all_epochs() == [4, 8, 12]
+    # the epoch-8 snapshot is the compacted 2-lane fleet with a lane map
+    two = jax.tree.map(lambda x: x[:2], states)
+    from repro.core.agent import reset_fleet_states
+    like_env = reset_fleet_states(keys[:2], env)
+    epoch, _, _, _, lanes = ck.restore(two, like_env, keys[:2], epoch=8,
+                                       with_lane_map=True)
+    assert epoch == 8
+    assert lanes.tolist() == [1, 2]          # lane 0 stopped and compacted
+
+    # resume_after_failure plans a survivor mesh and restores the newest
+    # (compacted) snapshot through the same path — templates describe the
+    # surviving 2-lane fleet
+    mesh, epoch, r_states, r_env, r_keys, r_lanes = resume_after_failure(
+        ck, env, agent, keys[:2], two, env_states=like_env,
+        alive_devices=1, with_lane_map=True)
+    assert epoch == 12 and mesh.devices.size == 1
+    assert r_lanes.tolist() == [1, 2]
+    for leaf in jax.tree.leaves((r_states, r_env, r_keys)):
+        assert np.ndim(leaf) == 0 or np.asarray(leaf).shape[0] == 2
+    ck.close()
+
+    with pytest.raises(TypeError):
+        resume_after_failure(ck, env, object(), keys, states)

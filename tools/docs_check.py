@@ -1,20 +1,24 @@
 """Documentation health checks (the CI docs job).
 
-Two checks, both runnable locally:
+Three checks, all runnable locally:
 
-  python tools/docs_check.py                  # intra-repo link check
+  python tools/docs_check.py                  # link check + examples parse
   python tools/docs_check.py --run-quickstart # + exec the README quickstart
+  python tools/docs_check.py --run-examples   # + exec EVERY registered example
 
 * Link check: every relative markdown link in README.md and docs/*.md
   must point at a file or directory that exists in the repo (external
   http(s)/mailto links and pure #anchors are skipped; #fragments on
   relative links are stripped before the existence check).
-* Quickstart smoke: the first ```python fenced block in README.md is
-  extracted and executed (CI pins JAX_PLATFORMS=cpu), so the 15-line
-  example users copy first can never rot.
+* Executable examples: EXECUTABLE_DOCS registers markdown files whose
+  FIRST ```python fenced block is a living example — currently the
+  README quickstart and the docs/elastic_fleets.md lane-lifecycle
+  walkthrough.  Each registered block is extracted and parsed on every
+  run, and executed by the CI docs job (which pins JAX_PLATFORMS=cpu),
+  so the snippets users copy first can never rot.
 
-tests/test_docs.py runs the link check and compiles the quickstart in
-tier-1; the CI docs job additionally executes it."""
+tests/test_docs.py runs the link check and compiles every registered
+example in tier-1; the CI docs job additionally executes them."""
 from __future__ import annotations
 
 import argparse
@@ -26,6 +30,13 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
+
+# repo-relative markdown files whose first ```python block must stay
+# executable (extract-and-exec'd in the CI docs job)
+EXECUTABLE_DOCS = (
+    "README.md",
+    "docs/elastic_fleets.md",
+)
 
 
 def markdown_files() -> list[pathlib.Path]:
@@ -49,13 +60,24 @@ def check_links() -> list[tuple[pathlib.Path, str]]:
     return broken
 
 
-def extract_quickstart() -> str:
-    """The first ```python fenced block in README.md."""
-    text = (REPO / "README.md").read_text()
+def extract_example(rel_path: str) -> str:
+    """The first ```python fenced block of a repo-relative markdown file."""
+    text = (REPO / rel_path).read_text()
     m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
     if m is None:
-        raise SystemExit("README.md has no ```python quickstart block")
+        raise SystemExit(f"{rel_path} has no ```python example block")
     return m.group(1)
+
+
+def extract_quickstart() -> str:
+    """The README quickstart (kept for back-compat callers)."""
+    return extract_example("README.md")
+
+
+def _exec_example(rel_path: str, snippet: str) -> None:
+    sys.path.insert(0, str(REPO / "src"))
+    exec(compile(snippet, rel_path, "exec"), {"__name__": "__example__"})  # noqa: S102
+    print(f"{rel_path} example executed ok")
 
 
 def main() -> int:
@@ -64,6 +86,10 @@ def main() -> int:
                     help="extract and exec the README quickstart block "
                          "(needs the package importable; pin "
                          "JAX_PLATFORMS=cpu in CI)")
+    ap.add_argument("--run-examples", action="store_true",
+                    help="extract and exec EVERY registered executable "
+                         "example (EXECUTABLE_DOCS), README quickstart "
+                         "included")
     args = ap.parse_args()
 
     broken = check_links()
@@ -73,13 +99,16 @@ def main() -> int:
         return 1
     print(f"links ok across {len(markdown_files())} markdown files")
 
-    snippet = extract_quickstart()
-    compile(snippet, "README.md quickstart", "exec")
-    print(f"quickstart block parses ({len(snippet.splitlines())} lines)")
-    if args.run_quickstart:
-        sys.path.insert(0, str(REPO / "src"))
-        exec(snippet, {"__name__": "__quickstart__"})   # noqa: S102
-        print("quickstart executed ok")
+    for rel in EXECUTABLE_DOCS:
+        snippet = extract_example(rel)
+        compile(snippet, rel, "exec")
+        print(f"{rel} example parses "
+              f"({len(snippet.splitlines())} lines)")
+    if args.run_examples:
+        for rel in EXECUTABLE_DOCS:
+            _exec_example(rel, extract_example(rel))
+    elif args.run_quickstart:
+        _exec_example("README.md", extract_quickstart())
     return 0
 
 
