@@ -57,7 +57,8 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
             scenario_batched: bool = False,
             broadcast_invariant: bool = False,
             sharded: bool = False,
-            lifecycle: bool = False) -> list[tuple]:
+            lifecycle: bool = False,
+            guards_overhead: bool = False) -> list[tuple]:
     # the broadcast comparison is a variant OF the scenario-batched fleet
     scenario_batched = scenario_batched or broadcast_invariant
     topo = apps.ALL_APPS[app]()
@@ -95,6 +96,31 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
                  f"lane_epochs_per_sec={eps_warm:.1f};"
                  f"speedup_vs_python={eps_warm / eps_python:.1f}x;"
                  f"speedup_incl_compile={eps_cold / eps_python:.1f}x"))
+
+    if guards_overhead:
+        # the SAME seed-only fleet run, re-timed inside the runtime
+        # tracing-discipline guards (repro.diagnostics.guards): implicit-
+        # transfer guard + jit-cache-miss sentinel + non-finite sweeps at
+        # chunk boundaries.  The program is already compiled from the row
+        # above, so this isolates steady-state guard overhead against
+        # dt_warm — the acceptance contract pins it under 5% on cq_small.
+        from repro.core import agent as agent_mod
+        from repro.diagnostics import guards
+        with guards(track=(agent_mod._fleet_program,),
+                    label="fleet_bench") as g:
+            run_online_fleet(keys, env, agent, states, T=epochs)  # settle
+            t0 = time.perf_counter()
+            run_online_fleet(keys, env, agent, states, T=epochs)
+            dt_g = time.perf_counter() - t0
+            compiles = g.counter.compiles
+        eps_g = fleet * epochs / dt_g
+        overhead = dt_g / dt_warm - 1.0
+        rows.append((f"fleet_bench_{app}_guards_f{fleet}_T{epochs}",
+                     dt_g / (fleet * epochs) * 1e6,
+                     f"guarded_lane_epochs_per_sec={eps_g:.1f};"
+                     f"unguarded_lane_epochs_per_sec={eps_warm:.1f};"
+                     f"guard_overhead_pct={overhead * 100:.2f};"
+                     f"fleet_program_compiles_under_guard={compiles}"))
 
     if scenario_batched:
         # scenario-batched fleet: per-lane EnvParams (mixed stragglers /
@@ -255,12 +281,17 @@ def main() -> None:
                          "vs the fixed grid on a plateauing fleet and "
                          "record executed lane-epochs, savings, and the "
                          "final-reward gap")
+    ap.add_argument("--guards", action="store_true",
+                    help="also re-time the seed-only fleet run inside the "
+                         "runtime tracing-discipline guards "
+                         "(repro.diagnostics.guards) and record the "
+                         "steady-state overhead vs the unguarded warm run")
     ap.add_argument("--json", default=str(DEFAULT_JSON),
                     help="benchmark JSON artifact path ('' disables)")
     args = ap.parse_args()
     rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
                    args.scenario_batched, args.broadcast_invariant,
-                   args.sharded, args.lifecycle)
+                   args.sharded, args.lifecycle, args.guards)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

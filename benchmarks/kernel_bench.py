@@ -67,13 +67,13 @@ def bench_knn_projection() -> list[tuple]:
         rows.append((f"knn_exact_N{n}M{m}K{k}", us,
                      "replaces_gurobi_miqp~10000us"))
         pj = jnp.asarray(proto)
-        f = jax.jit(lambda p: knn_actions_jax(p, k))
+        f = jax.jit(lambda p, k=k: knn_actions_jax(p, k))
         us = timeit(f, pj)
         rows.append((f"knn_beam_N{n}M{m}K{k}", us, "jit_in-graph"))
         # Pallas-backed top-2/regret reduction (kernels/knn_topk); interpret
         # mode off-TPU, so CPU wall time here is a correctness smoke, not a
         # TPU prediction
-        fp = jax.jit(lambda p: knn_actions_jax(p, k, use_pallas=True))
+        fp = jax.jit(lambda p, k=k: knn_actions_jax(p, k, use_pallas=True))
         us = timeit(fp, pj)
         rows.append((f"knn_beam_pallas_N{n}M{m}K{k}", us,
                      "row_top2_regret_kernel"))

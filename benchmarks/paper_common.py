@@ -108,7 +108,7 @@ def run_dqn(env: SchedulingEnv, budget: Budget, seed: int = 0,
     lats = []
     for f in range(F):
         p_f = _lane_params(env, env_params, f)
-        state_f = jax.tree.map(lambda x: x[f], states)
+        state_f = jax.tree.map(lambda x, f=f: x[f], states)
         s = env.reset(jax.random.PRNGKey(seed + 5), p_f)
         for t in range(2 * env.N):
             move = dqn_lib.select_move(jax.random.PRNGKey(t), state_f, cfg,
@@ -150,7 +150,7 @@ def run_actor_critic(env: SchedulingEnv, budget: Budget, seed: int = 0,
     for f in range(F):
         p_f = _lane_params(env, env_params, f)
         w = p_f.base_rates
-        state_f = jax.tree.map(lambda x: x[f], states)
+        state_f = jax.tree.map(lambda x, f=f: x[f], states)
         s = env.reset(jax.random.PRNGKey(seed + 5), p_f)
         best = None
         for t in range(4):

@@ -64,6 +64,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import ddpg, dqn
 from repro.core.api import Agent, make_epoch_step
+from repro.diagnostics import maybe_check_finite
 from repro.core.ddpg import DDPGConfig, DDPGState
 from repro.core.dqn import DQNConfig, DQNState
 from repro.sharding.fleet import fleet_spec, shard_fleet
@@ -283,24 +284,28 @@ def prepare_fleet(keys, env, states, env_states, env_params, mesh):
 
     Returns ``(keys, states, env_states, env_params, ref, params_axes,
     params_specs)``."""
-    keys = jnp.asarray(keys)
-    ref = env.default_params()
-    if env_params is None:
-        env_params = ref
-        params_axes = None
-    else:
-        from repro.dsdps.simulator import params_in_axes
-        params_axes = params_in_axes(env_params, ref)
-    if env_states is None:
-        pairs = jax.vmap(jax.random.split)(keys)          # [F, 2] keys
-        k_env, keys = pairs[:, 0], pairs[:, 1]
-        env_states = reset_fleet_states(k_env, env, env_params)
-    params_specs = None
-    if mesh is not None:
-        keys, states, env_states, env_params, params_specs = shard_fleet(
-            mesh, keys, states, env_states, env_params, ref)
-    return keys, states, env_states, env_params, ref, params_axes, \
-        params_specs
+    # setup preamble exemption: placing hosts arrays on devices is this
+    # function's JOB, so the diagnostics transfer guard (which polices the
+    # steady-state chunk loop) is lifted for its dynamic extent
+    with jax.transfer_guard("allow"):
+        keys = jnp.asarray(keys)
+        ref = env.default_params()
+        if env_params is None:
+            env_params = ref
+            params_axes = None
+        else:
+            from repro.dsdps.simulator import params_in_axes
+            params_axes = params_in_axes(env_params, ref)
+        if env_states is None:
+            pairs = jax.vmap(jax.random.split)(keys)      # [F, 2] keys
+            k_env, keys = pairs[:, 0], pairs[:, 1]
+            env_states = reset_fleet_states(k_env, env, env_params)
+        params_specs = None
+        if mesh is not None:
+            keys, states, env_states, env_params, params_specs = shard_fleet(
+                mesh, keys, states, env_states, env_params, ref)
+        return keys, states, env_states, env_params, ref, params_axes, \
+            params_specs
 
 
 def _run_single(key, env, agent, state, T, updates_per_epoch, explore,
@@ -463,6 +468,7 @@ def run_online_fleet(
         l_parts.append(np.asarray(lats))
         m_parts.append(np.asarray(moved))
         epoch += n
+        maybe_check_finite((states, rewards), f"run_online_fleet epoch {epoch}")
         if checkpoint is not None:
             checkpoint.save(epoch, states, env_states, keys)
     return states, History(rewards=np.concatenate(r_parts, axis=-1),

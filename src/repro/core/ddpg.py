@@ -316,7 +316,8 @@ def offline_pretrain(
     params = env.default_params() if env_params is None else env_params
     k_env, k_upd = jax.random.split(key)
 
-    @jax.jit
+    # scan bodies: lax.scan traces these inline — a per-call @jax.jit here
+    # would only rebuild a never-reused wrapper every pretrain call
     def collect(carry, k):
         env_state = carry
         k_a, k_step = jax.random.split(k)
@@ -338,7 +339,6 @@ def offline_pretrain(
     r_mean = R.mean()
     r_std = jnp.maximum(R.std(), 1e-4)
 
-    @jax.jit
     def fill(replay, xs):
         s, a, r, sn = xs
         return replay_add(replay, s, a,
@@ -351,7 +351,6 @@ def offline_pretrain(
                            r_var=jnp.square(r_std),
                            r_count=jnp.asarray(n_samples, jnp.int32))
 
-    @jax.jit
     def train(st, k):
         st, aux = update_step(k, st, cfg)
         return st, aux["critic_loss"]

@@ -1,0 +1,9 @@
+"""Runtime tracing-discipline guards (transfer guard, jit-cache-miss
+sentinel, chunk-boundary NaN sweeps).  Static counterpart:
+``tools/jaxguard``; rule catalog and usage: docs/static_analysis.md."""
+from repro.diagnostics.guards import (CompileCounter, GuardState,
+                                      NonFiniteError, active, guards,
+                                      maybe_check_finite)
+
+__all__ = ["CompileCounter", "GuardState", "NonFiniteError", "active",
+           "guards", "maybe_check_finite"]

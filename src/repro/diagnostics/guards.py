@@ -1,0 +1,181 @@
+"""Runtime tracing-discipline guards — the dynamic counterpart of the
+``tools/jaxguard`` static pass.
+
+Three guards, bundled by :func:`guards`:
+
+* ``jax.transfer_guard``: implicit host<->device transfers (the runtime
+  face of JG004) raise instead of silently serialising the dispatch
+  stream.  Explicit pulls (``np.asarray(x)``, ``jax.device_get``) stay
+  legal — that is how History traces leave the device.
+* :class:`CompileCounter`: a jit-cache-miss sentinel (runtime face of
+  JG002/JG003).  It reads the tracked jitted callables' trace-cache
+  sizes, so a steady-state loop that silently retraces every call shows
+  up as a count, not as a mysteriously slow run.
+* NaN/Inf sweeps: :func:`maybe_check_finite` is called by the fleet
+  runners at chunk boundaries; inside an active ``guards(nan_check=True)``
+  region it pulls each carry leaf to host and raises
+  :class:`NonFiniteError` naming the offending leaves.
+
+Typical use (what ``drl_control --guards`` wires up)::
+
+    from repro.core import agent as agent_mod
+    from repro.diagnostics import guards
+
+    with guards(track=(agent_mod._fleet_program,)) as g:
+        states, hist = agent_mod.run_online_fleet(keys, env, agent, states, T)
+    assert g.counter.compiles <= 1
+
+The counter works on anything with JAX's private-but-stable
+``_cache_size()`` (every ``jax.jit`` wrapper in the pinned version);
+callables without it are tracked as permanently-zero so ``guards`` never
+hard-fails on an unexpected object.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Iterable, Sequence
+
+import jax
+import numpy as np
+
+
+class NonFiniteError(RuntimeError):
+    """A guarded fleet carry contained NaN/Inf at a chunk boundary."""
+
+
+def _cache_size(fn) -> int:
+    getter = getattr(fn, "_cache_size", None)
+    return int(getter()) if callable(getter) else 0
+
+
+class CompileCounter:
+    """Counts fresh traces/compilations of tracked jitted callables.
+
+    Reads each wrapper's trace-cache size on entry and on demand; the
+    difference is the number of cache MISSES since the counter started —
+    exactly the retraces a stable loop should not be paying.  Usable as a
+    context manager or via explicit :meth:`start`.
+    """
+
+    def __init__(self, *targets, label: str = ""):
+        self.targets = tuple(targets)
+        self.label = label
+        self._base: tuple[int, ...] | None = None
+
+    def start(self) -> "CompileCounter":
+        self._base = tuple(_cache_size(t) for t in self.targets)
+        return self
+
+    def __enter__(self) -> "CompileCounter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    @property
+    def compiles(self) -> int:
+        """Cache misses across all tracked callables since :meth:`start`."""
+        if self._base is None:
+            raise RuntimeError("CompileCounter not started")
+        return sum(max(_cache_size(t) - b, 0)
+                   for t, b in zip(self.targets, self._base))
+
+    def per_target(self) -> dict[str, int]:
+        if self._base is None:
+            raise RuntimeError("CompileCounter not started")
+        out: dict[str, int] = {}
+        for i, (t, b) in enumerate(zip(self.targets, self._base)):
+            name = getattr(t, "__name__", repr(t))
+            if name in out:
+                name = f"{name}#{i}"
+            out[name] = max(_cache_size(t) - b, 0)
+        return out
+
+    def assert_compiles(self, expected: int, at_most: bool = False) -> None:
+        got = self.compiles
+        ok = got <= expected if at_most else got == expected
+        if not ok:
+            rel = "at most" if at_most else "exactly"
+            raise AssertionError(
+                f"jit-cache-miss sentinel{f' [{self.label}]' if self.label else ''}: "
+                f"expected {rel} {expected} compilation(s), observed {got} "
+                f"({self.per_target()}) — a changing static argument or a "
+                f"re-constructed jit wrapper is defeating the trace cache")
+
+
+@dataclasses.dataclass
+class GuardState:
+    """Live state of an active :func:`guards` region."""
+    counter: CompileCounter
+    nan_check: bool
+    nonfinite: list[str] = dataclasses.field(default_factory=list)
+
+
+_ACTIVE: contextvars.ContextVar[GuardState | None] = contextvars.ContextVar(
+    "repro_diagnostics_guards", default=None)
+
+
+def active() -> GuardState | None:
+    """The innermost active guard region, or None."""
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def guards(transfer: str = "disallow",
+           track: Sequence[Any] = (),
+           nan_check: bool = True,
+           label: str = ""):
+    """Enable the runtime guard bundle for the enclosed region.
+
+    ``transfer``  — ``jax.transfer_guard`` level ('allow', 'log',
+                    'disallow').  'disallow' blocks IMPLICIT transfers
+                    only; explicit ``np.asarray``/``device_get`` pulls
+                    still work, so steady-state fleet loops run unchanged.
+    ``track``     — jitted callables for the :class:`CompileCounter`.
+    ``nan_check`` — arm :func:`maybe_check_finite` at chunk boundaries.
+
+    Yields the :class:`GuardState`; its ``counter`` stays readable after
+    the region exits.
+    """
+    state = GuardState(CompileCounter(*track, label=label).start(), nan_check)
+    token = _ACTIVE.set(state)
+    try:
+        with jax.transfer_guard(transfer):
+            yield state
+    finally:
+        _ACTIVE.reset(token)
+
+
+def _leaf_name(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def maybe_check_finite(tree, where: str = "") -> None:
+    """Chunk-boundary NaN/Inf sweep — no-op unless a ``guards`` region
+    with ``nan_check=True`` is active.
+
+    Pulls floating leaves of ``tree`` to host (explicit d2h — legal under
+    the transfer guard) and raises :class:`NonFiniteError` naming every
+    non-finite leaf.  Fleet runners call this on the scan carries after
+    each chunk, so a diverging lane is caught within ``checkpoint.every``
+    epochs of the blow-up instead of surfacing as nonsense end-of-run
+    traces.
+    """
+    state = _ACTIVE.get()
+    if state is None or not state.nan_check:
+        return
+    bad: list[str] = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        if not np.isfinite(arr).all():
+            n = int((~np.isfinite(arr)).sum())
+            bad.append(f"{_leaf_name(path)} ({n}/{arr.size} non-finite)")
+    if bad:
+        state.nonfinite.extend(f"{where}: {b}" for b in bad)
+        raise NonFiniteError(
+            f"non-finite values in fleet carry at {where or 'chunk boundary'}: "
+            + "; ".join(bad))

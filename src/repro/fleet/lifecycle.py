@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.agent import (History, chunk_schedule, prepare_fleet,
                               reset_fleet_states, run_fleet_chunk)
 from repro.core.api import Agent
+from repro.diagnostics import maybe_check_finite
 from repro.dsdps.simulator import lane_params, params_in_axes, stack_env_params
 from repro.sharding.fleet import compaction_size, shard_fleet
 
@@ -150,7 +151,7 @@ def run_online_fleet_elastic(
     agent: Agent,
     states,
     T: int,
-    rule: StopRule = StopRule(),
+    rule: StopRule | None = None,
     updates_per_epoch: int = 1,
     explore: bool = True,
     env_states=None,
@@ -180,6 +181,7 @@ def run_online_fleet_elastic(
     the hook custom convergence criteria and the bit-match tests use."""
     from repro.core.agent import _require_agent
     agent = _require_agent(agent)
+    rule = rule if rule is not None else StopRule()
     T = int(T)
     if T < 1:
         raise ValueError(f"T must be >= 1, got {T}")
@@ -206,10 +208,15 @@ def run_online_fleet_elastic(
     t = 0
 
     def capture(pos: int, states_now, env_states_now) -> None:
-        o = int(orig[pos])
-        final_states[o] = jax.tree.map(
-            lambda x: np.asarray(x[pos]), states_now)
-        final_X[o] = np.asarray(env_states_now.X[pos])
+        # chunk-boundary bookkeeping crosses host<->device on purpose, so
+        # the diagnostics transfer guard is lifted here (as in the
+        # stop-test/compaction block below); the guarded steady state is
+        # the chunk scan itself
+        with jax.transfer_guard("allow"):
+            o = int(orig[pos])
+            final_states[o] = jax.tree.map(
+                lambda x: np.asarray(x[pos]), states_now)
+            final_X[o] = np.asarray(env_states_now.X[pos])
 
     for n in chunk_schedule(T, every):
         states, env_states, keys, rewards, lats, moved = run_fleet_chunk(
@@ -217,6 +224,8 @@ def run_online_fleet_elastic(
             T=n, updates_per_epoch=updates_per_epoch, explore=explore,
             params_axes=params_axes, mesh=mesh, params_specs=params_specs)
         executed += len(orig) * n
+        maybe_check_finite((states, rewards),
+                           f"run_online_fleet_elastic epoch {start_epoch + t + n}")
         r, l, m = np.asarray(rewards), np.asarray(lats), np.asarray(moved)
         rows = orig[live]
         rewards_buf[rows, t:t + n] = r[live]
@@ -230,51 +239,53 @@ def run_online_fleet_elastic(
         if t >= T:
             break
 
-        # -- stop test at the chunk boundary --------------------------------
-        if stop_fn is not None:
-            done_rows = np.asarray(stop_fn(rewards_buf[rows, :t], t),
-                                   bool)
-        elif t >= rule.warmup:
-            recent = jnp.asarray(rewards_buf[rows, t - 2 * rule.window:t])
-            done_rows = np.asarray(plateau_converged(recent, rule))
-        else:
-            continue
-        if not done_rows.any():
-            continue
-        live_pos = np.flatnonzero(live)
-        for pos in live_pos[done_rows]:
-            capture(int(pos), states, env_states)
-            o = int(orig[pos])
-            epochs_run[o] = t
-            rewards_buf[o, t:] = rewards_buf[o, t - 1]
-            lats_buf[o, t:] = lats_buf[o, t - 1]
-            moved_buf[o, t:] = 0.0
-        live[live_pos[done_rows]] = False
+        # -- stop test at the chunk boundary (boundary work: guard lifted) --
+        with jax.transfer_guard("allow"):
+            if stop_fn is not None:
+                done_rows = np.asarray(stop_fn(rewards_buf[rows, :t], t),
+                                       bool)
+            elif t >= rule.warmup:
+                recent = jnp.asarray(rewards_buf[rows, t - 2 * rule.window:t])
+                done_rows = np.asarray(plateau_converged(recent, rule))
+            else:
+                continue
+            if not done_rows.any():
+                continue
+            live_pos = np.flatnonzero(live)
+            for pos in live_pos[done_rows]:
+                capture(int(pos), states, env_states)
+                o = int(orig[pos])
+                epochs_run[o] = t
+                rewards_buf[o, t:] = rewards_buf[o, t - 1]
+                lats_buf[o, t:] = lats_buf[o, t - 1]
+                moved_buf[o, t:] = 0.0
+            live[live_pos[done_rows]] = False
 
-        # -- compaction -----------------------------------------------------
-        n_live = int(live.sum())
-        if n_live == 0:
-            break
-        target = compaction_size(n_live, mesh)
-        if target < len(orig):
-            keep = np.flatnonzero(live)
-            if target > n_live:          # pad with most recent passengers
-                passengers = np.flatnonzero(~live)[::-1][:target - n_live]
-                keep = np.sort(np.concatenate([keep, passengers]))
-            keys, states, env_states, env_params = compact_lanes(
-                keep, keys, states, env_states, env_params, ref)
-            orig, live = orig[keep], live[keep]
-            if mesh is not None:
-                keys, states, env_states, env_params, params_specs = \
-                    shard_fleet(mesh, keys, states, env_states, env_params,
-                                ref)
+            # -- compaction -------------------------------------------------
+            n_live = int(live.sum())
+            if n_live == 0:
+                break
+            target = compaction_size(n_live, mesh)
+            if target < len(orig):
+                keep = np.flatnonzero(live)
+                if target > n_live:      # pad with most recent passengers
+                    passengers = np.flatnonzero(~live)[::-1][:target - n_live]
+                    keep = np.sort(np.concatenate([keep, passengers]))
+                keys, states, env_states, env_params = compact_lanes(
+                    keep, keys, states, env_states, env_params, ref)
+                orig, live = orig[keep], live[keep]
+                if mesh is not None:
+                    keys, states, env_states, env_params, params_specs = \
+                        shard_fleet(mesh, keys, states, env_states,
+                                    env_params, ref)
 
     # lanes still running at the horizon (or passengers never re-captured)
     for pos in np.flatnonzero(live):
         capture(int(pos), states, env_states)
 
-    states_out = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
-                              *final_states)
+    with jax.transfer_guard("allow"):
+        states_out = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
+                                  *final_states)
     history = History(rewards=rewards_buf, latencies=lats_buf,
                       moved=moved_buf, final_assignment=np.stack(final_X))
     return ElasticResult(states=states_out, history=history,

@@ -46,6 +46,7 @@ freed lanes refilled), writing the ranked leaderboard to
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +125,12 @@ def main() -> None:
                          "rung")
     ap.add_argument("--search-json", default="artifacts/scenario_search.json",
                     help="leaderboard artifact path for --scenario-search")
+    ap.add_argument("--guards", action="store_true",
+                    help="run the online-learning phase under the runtime "
+                         "tracing-discipline guards (repro.diagnostics): "
+                         "implicit-transfer guard, jit-cache-miss sentinel, "
+                         "chunk-boundary NaN/Inf sweeps "
+                         "(docs/static_analysis.md)")
     args = ap.parse_args()
     if args.fleet < 1:
         ap.error("--fleet must be >= 1")
@@ -229,22 +236,37 @@ def main() -> None:
     print(f"online learning: {args.agent} fleet of {args.fleet} x "
           f"{args.epochs - start_epoch} decision epochs in one batched "
           f"scan{scen}{where}{stop} ...")
-    if args.early_stop:
-        from repro.fleet.lifecycle import StopRule, run_online_fleet_elastic
-        result = run_online_fleet_elastic(
-            keys, env, agent, states, T=args.epochs - start_epoch,
-            rule=StopRule(), env_params=env_params, env_states=env_states,
-            mesh=mesh, checkpoint=ck, start_epoch=start_epoch)
-        states, hist = result.states, result.history
-        print(f"early stopping: per-lane epochs {result.epochs_run.tolist()} "
-              f"— {result.executed_lane_epochs} lane-epochs executed vs "
-              f"{result.fixed_grid_lane_epochs} fixed-grid "
-              f"({result.savings:.0%} saved)")
+    if args.guards:
+        from repro.core import agent as agent_mod
+        from repro.diagnostics import guards
+        region = guards(track=(agent_mod._fleet_program,
+                               agent_mod._fleet_program_sharded,
+                               agent_mod._fleet_program_sharded_donated),
+                        label="drl_control")
     else:
-        states, hist = run_online_fleet(
-            keys, env, agent, states, T=args.epochs - start_epoch,
-            env_params=env_params, env_states=env_states, mesh=mesh,
-            checkpoint=ck, start_epoch=start_epoch)
+        region = contextlib.nullcontext(None)
+    with region as g:
+        if args.early_stop:
+            from repro.fleet.lifecycle import StopRule, run_online_fleet_elastic
+            result = run_online_fleet_elastic(
+                keys, env, agent, states, T=args.epochs - start_epoch,
+                rule=StopRule(), env_params=env_params, env_states=env_states,
+                mesh=mesh, checkpoint=ck, start_epoch=start_epoch)
+            states, hist = result.states, result.history
+            print(f"early stopping: per-lane epochs "
+                  f"{result.epochs_run.tolist()} "
+                  f"— {result.executed_lane_epochs} lane-epochs executed vs "
+                  f"{result.fixed_grid_lane_epochs} fixed-grid "
+                  f"({result.savings:.0%} saved)")
+        else:
+            states, hist = run_online_fleet(
+                keys, env, agent, states, T=args.epochs - start_epoch,
+                env_params=env_params, env_states=env_states, mesh=mesh,
+                checkpoint=ck, start_epoch=start_epoch)
+    if g is not None:
+        print(f"guards: clean — {g.counter.compiles} fleet-program "
+              f"compilation(s) {g.counter.per_target()}, no implicit "
+              f"transfers, no non-finite carries")
     if ck is not None:
         ck.close()
 

@@ -24,7 +24,7 @@ from repro.data.pipeline import DataConfig, PrefetchIterator, batch_at
 from repro.fault.heartbeat import HeartbeatMonitor
 from repro.fault.straggler import StragglerDetector
 from repro.models import lm
-from repro.train.trainer import TrainSetup, init_train_state, make_train_step
+from repro.train.trainer import TrainSetup, init_train_state, jitted_train_step
 
 
 def run_training(cfg, setup: TrainSetup, steps: int, global_batch: int,
@@ -43,7 +43,7 @@ def run_training(cfg, setup: TrainSetup, steps: int, global_batch: int,
         start_step = int(state.step)
         print(f"resumed from step {start_step}")
 
-    train_step = jax.jit(make_train_step(cfg, setup), donate_argnums=(0,))
+    train_step = jitted_train_step(cfg, setup)
     monitor = HeartbeatMonitor(num_workers=jax.process_count())
     stragglers = StragglerDetector(num_workers=jax.process_count())
 

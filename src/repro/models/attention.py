@@ -73,7 +73,7 @@ def flash_attention(
         hi = ((i + 1) * q_chunk) // kv_chunk if causal else nkv
         full = (i * q_chunk) // kv_chunk if causal else nkv
 
-        def kv_step(carry, j):
+        def kv_step(carry, j, qi=qi):
             kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
             vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
             return _merge(carry, _attend_chunk(qi, kj, vj, None, scale)), None

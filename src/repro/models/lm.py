@@ -249,7 +249,7 @@ def _scan_blocks(cfg: ModelConfig, layers: Params, x, positions,
         aux = jnp.zeros((), jnp.float32)
         nb = cfg.num_blocks
         for b in range(nb):
-            blk = jax.tree.map(lambda a: a[b], layers)
+            blk = jax.tree.map(lambda a, b=b: a[b], layers)
             (x, aux), _ = body((x, aux), blk)
     return x, aux
 

@@ -155,6 +155,9 @@ def mamba_step(p: dict, u_t: jnp.ndarray, cache: dict, *, d_state: int,
 # ===========================================================================
 def rwkv6_init(key, d: int, d_ff: int, head_size: int, dtype=jnp.bfloat16) -> dict:
     H = d // head_size
+    # derive the channel-mix receptance key BEFORE split() consumes `key`
+    # (same bits as the old fold_in-after-split, minus the key reuse)
+    k_wcr = jax.random.fold_in(key, 99)
     ks = jax.random.split(key, 12)
     lora = max(d // 64, 32)
     return {
@@ -175,7 +178,7 @@ def rwkv6_init(key, d: int, d_ff: int, head_size: int, dtype=jnp.bfloat16) -> di
         "mu_cr": jax.random.uniform(ks[9], (d,), jnp.float32).astype(dtype),
         "Wck": nn.linear_init(ks[10], d, d_ff, dtype=dtype),
         "Wcv": nn.linear_init(ks[11], d_ff, d, dtype=dtype),
-        "Wcr": nn.linear_init(jax.random.fold_in(key, 99), d, d, dtype=dtype),
+        "Wcr": nn.linear_init(k_wcr, d, d, dtype=dtype),
     }
 
 

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
-from repro.serve.engine import SamplingParams, sample_token
+from repro.serve.engine import SamplingParams, jitted_serve_step, sample_token
 
 
 @dataclasses.dataclass
@@ -36,18 +36,18 @@ class ContinuousBatcher:
     """Host-side slot scheduler around a per-slot-position decode step."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int, n_slots: int,
-                 eos_id: int = 0, sp: SamplingParams = SamplingParams()):
+                 eos_id: int = 0, sp: SamplingParams | None = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.n_slots = n_slots
         self.eos_id = eos_id
-        self.sp = sp
+        self.sp = sp if sp is not None else SamplingParams()
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)       # prompt cursor
         self.cache = lm.init_cache(cfg, batch=n_slots, max_seq=max_seq)
-        self._step = jax.jit(lm.serve_step(cfg))
+        self._step = jitted_serve_step(cfg)
         self._finished: list[Request] = []
 
     # -- public API ----------------------------------------------------------

@@ -7,6 +7,7 @@ serve/continuous.py."""
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -20,6 +21,13 @@ from repro.models.config import ModelConfig
 class SamplingParams:
     temperature: float = 0.0          # 0 => greedy
     top_k: int = 0                    # 0 => no top-k filter
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_serve_step(cfg: ModelConfig):
+    """One jitted decode step per config, shared across engine instances —
+    a per-instance jax.jit would start every engine with a cold trace cache."""
+    return jax.jit(lm.serve_step(cfg))
 
 
 def sample_token(key, logits: jnp.ndarray, sp: SamplingParams) -> jnp.ndarray:
@@ -46,7 +54,7 @@ class Engine:
         self.max_seq = max_seq
         self.batch_size = batch_size
         self.enc_len = enc_len
-        self._step = jax.jit(lm.serve_step(cfg))
+        self._step = jitted_serve_step(cfg)
 
     def new_cache(self):
         return lm.init_cache(self.cfg, batch=self.batch_size,
@@ -62,9 +70,10 @@ class Engine:
         return cache, logits[-1]                      # last-position logits
 
     def generate(self, key, prompt_tokens: jnp.ndarray, max_new_tokens: int,
-                 sp: SamplingParams = SamplingParams(),
+                 sp: SamplingParams | None = None,
                  frames: jnp.ndarray | None = None) -> jnp.ndarray:
         """Returns [B, max_new_tokens] sampled continuations."""
+        sp = sp if sp is not None else SamplingParams()
         cache = self.new_cache()
         if self.cfg.encoder_layers and frames is not None:
             cache = lm.prefill_encoder(self.cfg, self.params, cache, frames)

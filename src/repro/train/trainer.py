@@ -83,6 +83,13 @@ def abstract_train_state(cfg: ModelConfig, setup: TrainSetup):
         lambda: _finish_init(lm.init_params(cfg, jax.random.PRNGKey(0)), setup))
 
 
+@functools.lru_cache(maxsize=None)
+def jitted_train_step(cfg: ModelConfig, setup: TrainSetup) -> Callable:
+    """One donating jitted step per (cfg, setup) — callers that jit the
+    factory's closure per run pay a full retrace every launch."""
+    return jax.jit(make_train_step(cfg, setup), donate_argnums=(0,))
+
+
 def make_train_step(cfg: ModelConfig, setup: TrainSetup) -> Callable:
     loss_fn = lm.train_loss(cfg)
     optz = make_optimizer(setup)

@@ -1,0 +1,25 @@
+"""JG001 negative: rebinding, loop-header splits, and exclusive branches
+are all fine."""
+import jax
+
+
+def rebind(key):
+    key, sub = jax.random.split(key)
+    noise = jax.random.normal(sub, (3,))
+    draw = jax.random.uniform(key, (3,))      # fine: `key` was rebound
+    return noise, draw
+
+
+def loop_header(key, n):
+    outs = []
+    for k in jax.random.split(key, n):        # splits once per call
+        outs.append(jax.random.normal(k, (2,)))
+    return outs
+
+
+def exclusive_branches(key, flag):
+    if flag:
+        a, _ = jax.random.split(key, 2)
+        return a
+    c, _ = jax.random.split(key, 2)           # other branch returned already
+    return c

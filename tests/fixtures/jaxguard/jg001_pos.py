@@ -1,0 +1,17 @@
+"""JG001 positive: key reused after split; split in a loop, key never
+rebound."""
+import jax
+
+
+def reuse_after_split(key):
+    keys = jax.random.split(key, 4)
+    noise = jax.random.normal(key, (3,))      # JG001: `key` already consumed
+    return keys, noise
+
+
+def split_in_loop(key, xs):
+    out = []
+    for x in xs:
+        ks = jax.random.split(key, 2)         # JG001: same streams each pass
+        out.append(ks)
+    return out

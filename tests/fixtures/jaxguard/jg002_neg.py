@@ -1,0 +1,29 @@
+"""JG002 negative: module-level jits, @partial decorators, and
+lru_cache'd builders are the sanctioned forms."""
+import functools
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def decorated(x):
+    return x * 2
+
+
+@partial(jax.jit, static_argnames=("n",))
+def decorated_partial(x, n):
+    return x * n
+
+
+def _impl(x):
+    return x + 1
+
+
+module_level = jax.jit(_impl)
+
+
+@functools.lru_cache(maxsize=None)
+def builder(n):
+    # once-per-config construction: the lru_cache IS the jit cache's owner
+    return jax.jit(lambda x: x * n)

@@ -1,0 +1,30 @@
+"""JG002 positive: per-call jit construction, jitted def in a function
+body, jit and vmap built inside loops."""
+import jax
+
+
+def per_call(f, x):
+    step = jax.jit(f)                         # JG002: fresh cache per call
+    return step(x)
+
+
+def nested_jitted_def(x):
+    @jax.jit
+    def inner(y):                             # JG002: decorator runs per call
+        return y + 1
+    return inner(x)
+
+
+def jit_in_loop(f, xs):
+    outs = []
+    for x in xs:
+        g = jax.jit(f)                        # JG002: re-jit per iteration
+        outs.append(g(x))
+    return outs
+
+
+def vmap_in_loop(f, xs):
+    h = None
+    for x in xs:
+        h = jax.vmap(f)                       # JG002: vmap has no cache
+    return h

@@ -1,0 +1,15 @@
+"""JG003 negative: correct statics, including module-constant tuples and
+tuple concatenation."""
+import jax
+
+_BASE = ("n",)
+_STATICS = _BASE + ("flag",)
+
+
+def step(state, n, flag):
+    return state
+
+
+by_const = jax.jit(step, static_argnames=_STATICS)
+by_nums = jax.jit(step, static_argnums=(1, 2))
+by_literal = jax.jit(step, static_argnames=("n",))

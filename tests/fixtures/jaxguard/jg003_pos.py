@@ -1,0 +1,18 @@
+"""JG003 positive: static declarations that silently miss or cannot
+hash."""
+import jax
+
+
+def step(state, n):
+    return state
+
+
+wrong_name = jax.jit(step, static_argnames=("m",))       # JG003: no param m
+out_of_range = jax.jit(step, static_argnums=(5,))        # JG003: 2 params
+
+
+def run(state, opts=[1, 2]):
+    return state
+
+
+unhashable_static = jax.jit(run, static_argnames=("opts",))   # JG003

@@ -1,0 +1,27 @@
+"""JG004 negative: hoisted constants, dynamic shapes, and trace-time
+loops (unrolled once at trace time) are fine."""
+import jax
+import jax.numpy as jnp
+
+HOISTED = jnp.ones((3, 3))
+
+
+def hoisted_loop(xs):
+    out = 0.0
+    for x in xs:
+        out = out + x * HOISTED               # constant built once
+    return out
+
+
+def dynamic_shape(xs, n):
+    y = None
+    for x in xs:
+        y = jnp.zeros(n)                      # shape is data, not a literal
+    return y
+
+
+@jax.jit
+def trace_time_loop(x):
+    for _ in range(3):                        # unrolled during tracing
+        x = x + jnp.ones((3,))
+    return x

@@ -1,0 +1,18 @@
+"""JG004 positive: all-literal jnp constructors inside host loops — one
+h2d transfer per iteration for a constant."""
+import jax.numpy as jnp
+
+
+def hot_loop(xs):
+    out = 0.0
+    for x in xs:
+        out = out + x * jnp.ones((3, 3))      # JG004: hoist above the loop
+    return out
+
+
+def while_loop(n):
+    acc = None
+    while n > 0:
+        acc = jnp.zeros(4)                    # JG004
+        n -= 1
+    return acc

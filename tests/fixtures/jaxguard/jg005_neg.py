@@ -1,0 +1,15 @@
+"""JG005 negative: None defaults, immutable scalars, and field
+factories."""
+import dataclasses
+from functools import partial
+
+
+def fine(xs=None, n=3, name="x", fn=partial(print, "ok")):
+    return xs if xs is not None else []
+
+
+@dataclasses.dataclass
+class Record:
+    tags: list = dataclasses.field(default_factory=list)
+    n: int = 0
+    label: str = "lane"

@@ -1,0 +1,23 @@
+"""JG005 positive: shared mutable defaults in signatures and pytree
+dataclass fields."""
+import dataclasses
+
+import numpy as np
+
+
+class Options:
+    pass
+
+
+def mutable_literal(xs=[]):                   # JG005
+    return xs
+
+
+def shared_instance(opts=Options()):          # JG005: one instance forever
+    return opts
+
+
+@dataclasses.dataclass
+class Record:
+    tags: list = []                           # JG005: shared list
+    buf: np.ndarray = np.zeros(3)             # JG005: shared array

@@ -1,0 +1,22 @@
+"""JG006 negative: rebinding the donated name, or copying what is needed
+before the donating call."""
+import jax
+import numpy as np
+
+
+def _step(state):
+    return state
+
+
+prog = jax.jit(_step, donate_argnums=(0,))
+
+
+def rebound(state):
+    state = prog(state)                       # donated name rebound: fine
+    return state.sum()
+
+
+def copied_first(state):
+    norm = np.asarray(state).sum()            # read BEFORE donation: fine
+    state = prog(state)
+    return state, norm

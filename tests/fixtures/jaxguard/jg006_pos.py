@@ -1,0 +1,16 @@
+"""JG006 positive: a buffer donated to a module-level jitted program is
+read after the donating call."""
+import jax
+
+
+def _step(state):
+    return state
+
+
+prog = jax.jit(_step, donate_argnums=(0,))
+
+
+def run(state):
+    new_state = prog(state)
+    norm = state.sum()                        # JG006: state may be aliased
+    return new_state, norm

@@ -1,0 +1,14 @@
+"""JG007 negative: host conversions outside traced code, and static
+config access inside it."""
+import jax
+import numpy as np
+
+
+def host_side(x):
+    return float(x) + np.asarray(x).sum()     # not traced: fine
+
+
+@jax.jit
+def static_config(x, cfg):
+    scale = float(cfg.lr)                     # attribute access: static conf
+    return x * scale

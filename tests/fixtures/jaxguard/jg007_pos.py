@@ -1,0 +1,19 @@
+"""JG007 positive: host syncs on traced values inside jitted paths."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def jitted(x):
+    if float(x[0]) > 0:                       # JG007: concretizes the tracer
+        x = x + 1
+    y = np.asarray(x)                         # JG007: host pull while traced
+    z = x.item()                              # JG007: forced d2h sync
+    return y, z
+
+
+def scan_body_traced(xs):
+    def body(carry, x):
+        return carry + int(x), None           # JG007: body is scan-traced
+    total, _ = jax.lax.scan(body, 0, xs)
+    return total

@@ -133,35 +133,34 @@ def test_model_based_schedule_beats_round_robin(small_env):
     assert mb < rr * 1.02   # at least matches RR (usually clearly better)
 
 
-def test_model_based_no_retrace_across_calls(monkeypatch):
+def test_model_based_no_retrace_across_calls():
     """Regression: ``fit`` used to build a fresh ``jax.jit`` wrapper per
     call and ``schedule`` re-defined + re-jitted its move search per call —
     every invocation retraced.  Both now go through module-level jitted
-    programs; a traced-side-effect counter on ``features`` must not grow
-    across repeated fit/schedule calls with the same static args."""
+    programs; the diagnostics jit-cache-miss sentinel must see exactly one
+    compilation each on first use and ZERO across repeat calls with the
+    same static args."""
     from repro.core import model_based as mb
-    # fresh env instance => fresh static jit key => tracing is observable
+    from repro.diagnostics import CompileCounter
+    # fresh env instance => fresh static jit key => compilation is observable
     topo = apps.continuous_queries("small")
     env = SchedulingEnv(topo, default_workload(topo))
-    calls = []
-    orig = mb.features
-
-    def counting_features(*a, **k):
-        calls.append(1)
-        return orig(*a, **k)
-
-    monkeypatch.setattr(mb, "features", counting_features)
-    sched = ModelBasedScheduler(env).fit(jax.random.PRNGKey(0), n_samples=50)
     w = env.workload.init()
-    X1 = sched.schedule(w, sweeps=2)
-    n_traced = len(calls)
-    assert n_traced > 0, "first fit+schedule must trace through features"
+    with CompileCounter(mb._fit_theta_jit, label="fit") as cc_fit, \
+            CompileCounter(mb.sweep_schedule, label="schedule") as cc_sched:
+        sched = ModelBasedScheduler(env).fit(jax.random.PRNGKey(0),
+                                             n_samples=50)
+        X1 = sched.schedule(w, sweeps=2)
+    cc_fit.assert_compiles(1)
+    cc_sched.assert_compiles(1)
     # same static args (env, n_samples, sweeps), new traced values: the
     # cached executables run without re-tracing
-    sched.fit(jax.random.PRNGKey(1), n_samples=50)
-    X2 = sched.schedule(w * 1.1, sweeps=2)
-    X3 = sched.schedule(w, X0=X1, sweeps=2)
-    assert len(calls) == n_traced, "fit/schedule retraced on repeat calls"
+    with CompileCounter(mb._fit_theta_jit, mb.sweep_schedule,
+                        label="repeat") as cc:
+        sched.fit(jax.random.PRNGKey(1), n_samples=50)
+        X2 = sched.schedule(w * 1.1, sweeps=2)
+        X3 = sched.schedule(w, X0=X1, sweeps=2)
+    cc.assert_compiles(0)
     assert X2.shape == X1.shape == X3.shape
 
 

@@ -148,7 +148,7 @@ def test_heterogeneous_fleet_matches_single_runs(small_env, ddpg_cfg):
                                   env_params=params)
     assert h_fleet.rewards.shape == (F, T)
     for i in range(F):
-        st_i = jax.tree.map(lambda x: x[i], states)
+        st_i = jax.tree.map(lambda x, i=i: x[i], states)
         _, h_i = run_online_agent(keys[i], env, agent, st_i, T=T,
                                   env_params=lanes[i])
         np.testing.assert_array_equal(h_fleet.rewards[i], h_i.rewards)
@@ -250,7 +250,7 @@ def test_model_based_fleet_is_params_aware(small_env):
         # model: bit-matches fleet lane i.  (The fit itself is a vmapped
         # ill-conditioned ridge solve, so the lane state — not a re-fit —
         # is the single-run starting point.)
-        st_i = jax.tree.map(lambda x: x[i], states)
+        st_i = jax.tree.map(lambda x, i=i: x[i], states)
         _, h_i = run_online_agent(keys[i], env, agent, st_i, T=T,
                                   env_params=lane_p)
         np.testing.assert_array_equal(h_fleet.rewards[i], h_i.rewards)

@@ -1,0 +1,155 @@
+"""Runtime tracing-discipline guards (repro.diagnostics).
+
+Covers the jit-cache-miss sentinel (CompileCounter), the guards() bundle
+(transfer guard + counter + NaN sweeps), and the acceptance contract: the
+host-mesh ``run_online_fleet`` epoch step compiles EXACTLY ONCE across a
+4-lane heterogeneous (per-lane scenario params) fleet, and repeat runs
+with the same statics compile zero times."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import agent as agent_mod
+from repro.core import ddpg, make_agent
+from repro.core.agent import run_online_fleet
+from repro.core.ddpg import DDPGConfig
+from repro.diagnostics import (CompileCounter, NonFiniteError, active,
+                               guards, maybe_check_finite)
+from repro.dsdps import SchedulingEnv, apps, scenarios
+from repro.dsdps.apps import default_workload
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def small_env():
+    topo = apps.continuous_queries("small")
+    return SchedulingEnv(topo, default_workload(topo))
+
+
+@pytest.fixture(scope="module")
+def ddpg_agent(small_env):
+    cfg = DDPGConfig(n_executors=small_env.N, n_machines=small_env.M,
+                     state_dim=small_env.state_dim, k_nn=4)
+    return make_agent("ddpg", small_env, cfg=cfg)
+
+
+def _fleet(small_env, ddpg_agent, F):
+    states = ddpg.init_fleet(jax.random.PRNGKey(0), ddpg_agent.cfg, F)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    return keys, states
+
+
+# --------------------------------------------------------------------------
+# CompileCounter
+# --------------------------------------------------------------------------
+def test_compile_counter_counts_cache_misses():
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    f(jnp.arange(3))                      # warm an unrelated shape
+    with CompileCounter(f) as cc:
+        f(jnp.arange(3))                  # cached: no miss
+        assert cc.compiles == 0
+        f(jnp.arange(5))                  # new shape: one miss
+        assert cc.compiles == 1
+        f(jnp.arange(5))
+    assert cc.compiles == 1               # readable after exit
+    assert cc.per_target() == {"f": 1}
+
+
+def test_compile_counter_assertions():
+    @jax.jit
+    def g(x):
+        return x + 1
+
+    cc = CompileCounter(g, label="unit").start()
+    g(jnp.arange(4))
+    cc.assert_compiles(1)
+    cc.assert_compiles(3, at_most=True)
+    with pytest.raises(AssertionError, match="jit-cache-miss sentinel"):
+        cc.assert_compiles(0)
+    with pytest.raises(RuntimeError, match="not started"):
+        CompileCounter(g).compiles
+
+
+def test_compile_counter_tolerates_plain_callables():
+    cc = CompileCounter(lambda x: x).start()
+    assert cc.compiles == 0               # no _cache_size: tracked as zero
+
+
+# --------------------------------------------------------------------------
+# guards() bundle
+# --------------------------------------------------------------------------
+def test_guards_blocks_implicit_transfers_allows_explicit_pulls():
+    dev = jnp.arange(4.0)
+    with guards(nan_check=False):
+        assert np.asarray(dev).sum() == 6.0      # explicit d2h: legal
+        with pytest.raises(Exception, match="[Dd]isallowed"):
+            jnp.ones(3)                          # implicit fill h2d: blocked
+    jnp.ones(3)                                  # guard lifted on exit
+
+
+def test_guards_state_is_scoped():
+    assert active() is None
+    with guards(nan_check=True) as g:
+        assert active() is g
+    assert active() is None
+
+
+def test_maybe_check_finite_noop_outside_guards():
+    maybe_check_finite({"x": jnp.array([np.nan])}, "nowhere")  # no raise
+
+
+def test_maybe_check_finite_raises_and_names_leaf():
+    tree = {"ok": jnp.ones(3), "boom": jnp.array([1.0, np.inf, np.nan])}
+    with guards(nan_check=True) as g:
+        with pytest.raises(NonFiniteError, match="boom"):
+            maybe_check_finite(tree, "epoch 7")
+    assert any("epoch 7" in rec for rec in g.nonfinite)
+    # int leaves never trip the sweep
+    with guards(nan_check=True):
+        maybe_check_finite({"i": jnp.arange(3)}, "ints")
+
+
+# --------------------------------------------------------------------------
+# Acceptance: one compilation per fleet program, heterogeneous 4-lane fleet
+# --------------------------------------------------------------------------
+def test_host_mesh_epoch_step_compiles_exactly_once(small_env, ddpg_agent):
+    """4-lane heterogeneous fleet on the host mesh: the sharded fleet
+    program compiles exactly once for the whole run, and a second run
+    with the same statics compiles zero times."""
+    env = small_env
+    F = 4
+    env_params = scenarios.build_for(env, "mixed", F)
+    mesh = make_host_mesh()
+    keys, states = _fleet(env, ddpg_agent, F)
+    with guards(track=(agent_mod._fleet_program_sharded,)) as g:
+        _, hist = run_online_fleet(keys, env, ddpg_agent, states, T=3,
+                                   env_params=env_params, mesh=mesh)
+    assert hist.rewards.shape == (F, 3)
+    g.counter.assert_compiles(1)
+    # warm cache: an identical run must not compile at all
+    with guards(track=(agent_mod._fleet_program_sharded,)) as g2:
+        run_online_fleet(keys, env, ddpg_agent, states, T=3,
+                         env_params=env_params, mesh=mesh)
+    g2.counter.assert_compiles(0)
+
+
+def test_unsharded_chunked_run_compile_ceiling(small_env, ddpg_agent):
+    """Plain vmap path, chunked by a checkpoint cadence: at most one
+    compilation per distinct chunk length (T=5, every=3 -> chunks 3+2)."""
+    env = small_env
+    keys, states = _fleet(env, ddpg_agent, 4)
+
+    class Cadence:                        # checkpoint stub: cadence only
+        every = 3
+
+        def save(self, *a, **k):
+            pass
+
+    with guards(track=(agent_mod._fleet_program,)) as g:
+        run_online_fleet(keys, env, ddpg_agent, states, T=5,
+                         checkpoint=Cadence())
+    g.counter.assert_compiles(2, at_most=True)

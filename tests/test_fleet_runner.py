@@ -45,7 +45,7 @@ def test_fleet_bitmatches_sequential_singles(small_env, ddpg_cfg, ddpg_agent):
     assert h_fleet.rewards.shape == (F, T)
 
     for i in range(F):
-        st_i = jax.tree.map(lambda x: x[i], states)
+        st_i = jax.tree.map(lambda x, i=i: x[i], states)
         _, h_i = run_online_agent(keys[i], env, ddpg_agent, st_i, T=T,
                                   updates_per_epoch=1)
         np.testing.assert_array_equal(h_fleet.rewards[i], h_i.rewards)

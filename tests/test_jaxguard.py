@@ -1,0 +1,152 @@
+"""jaxguard static-analysis pass (tools/jaxguard).
+
+One positive + one negative fixture per rule (tests/fixtures/jaxguard/),
+suppression handling, the versioned JSON report schema, and CLI exit
+codes.  The fixtures double as the rule catalog's executable examples."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from tools.jaxguard import (RULES, SCHEMA_VERSION, analyze_source,
+                            render_json, scan)
+from tools.jaxguard.cli import main
+from tools.jaxguard.report import Finding, count_by_code
+from tools.jaxguard.suppress import Suppressions
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "jaxguard"
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+ALL_CODES = ("JG001", "JG002", "JG003", "JG004", "JG005", "JG006", "JG007")
+
+
+def run_on(name: str, select: set[str] | None = None):
+    path = FIXTURES / name
+    return analyze_source(str(path), path.read_text(), select=select)
+
+
+# --------------------------------------------------------------------------
+# per-rule fixtures: positive flags, negative is silent
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("code,n_expected", [
+    ("JG001", 2),   # use-after-split + split-in-loop
+    ("JG002", 4),   # jit-in-function, jitted def, jit-in-loop, vmap-in-loop
+    ("JG003", 3),   # unknown name, out-of-range num, unhashable static
+    ("JG004", 2),   # for-loop + while-loop literal constructors
+    ("JG005", 4),   # literal default, instance default, 2 dataclass fields
+    ("JG006", 1),   # donated read-after
+    ("JG007", 4),   # float(), np.asarray, .item(), int() in scan body
+])
+def test_positive_fixture_flags(code, n_expected):
+    findings = run_on(f"{code.lower()}_pos.py", select={code})
+    assert len(findings) == n_expected, findings
+    assert all(f.code == code for f in findings)
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_negative_fixture_is_silent(code):
+    findings = run_on(f"{code.lower()}_neg.py", select={code})
+    assert findings == [], findings
+
+
+def test_rule_catalog_is_complete():
+    assert tuple(sorted(RULES)) == ALL_CODES
+    for code, rule in RULES.items():
+        assert rule.code == code and rule.name and rule.summary
+
+
+# --------------------------------------------------------------------------
+# suppression
+# --------------------------------------------------------------------------
+def test_line_suppression_silences_named_rule_only():
+    findings = run_on("suppressed.py")
+    # the two suppressed sites are silent; the unsuppressed one fires
+    assert [f.line for f in findings if f.code == "JG002"] == [18]
+
+
+def test_file_level_suppression():
+    assert run_on("suppressed_file.py") == []
+
+
+def test_suppression_parsing():
+    sup = Suppressions(
+        "x = 1  # jaxguard: disable=JG001,jg002\n"
+        "y = 2  # JAXGUARD: disable=all\n"
+        "# jaxguard: disable-file=JG007\n")
+    assert sup.is_suppressed(1, "JG001") and sup.is_suppressed(1, "JG002")
+    assert not sup.is_suppressed(1, "JG003")
+    assert sup.is_suppressed(2, "JG006")          # `all`
+    assert sup.is_suppressed(99, "JG007")         # file-level, any line
+
+
+# --------------------------------------------------------------------------
+# JSON report schema (pinned: bump SCHEMA_VERSION on shape changes)
+# --------------------------------------------------------------------------
+def test_json_report_schema_is_stable():
+    findings, n = scan([str(FIXTURES / "jg001_pos.py")])
+    report = render_json(findings, ["tests/fixtures"], n)
+    assert report["schema_version"] == SCHEMA_VERSION == 1
+    assert set(report) == {"schema_version", "roots", "files_scanned",
+                           "findings", "counts"}
+    assert report["files_scanned"] == 1
+    for f in report["findings"]:
+        assert set(f) == {"code", "rule", "path", "line", "col", "message"}
+        assert f["code"] in RULES and f["rule"] == RULES[f["code"]].name
+    assert report["counts"] == count_by_code(findings)
+    json.dumps(report)                            # round-trips
+
+
+def test_findings_sort_stably():
+    a = Finding("b.py", 1, 0, "JG001", "x")
+    b = Finding("a.py", 9, 0, "JG002", "y")
+    c = Finding("a.py", 2, 0, "JG002", "y")
+    assert sorted([a, b, c]) == [c, b, a]
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+def test_cli_exit_codes_and_artifact(tmp_path, capsys):
+    art = tmp_path / "report.json"
+    rc = main([str(FIXTURES / "jg002_pos.py"), "--json", str(art)])
+    assert rc == 1
+    data = json.loads(art.read_text())
+    assert data["counts"] == {"JG002": 4}
+    rc = main([str(FIXTURES / "jg002_neg.py")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+
+
+def test_cli_select_and_list_rules(capsys):
+    rc = main([str(FIXTURES / "jg003_pos.py"), "--select", "JG003"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "JG005" not in out and "JG003" in out
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ALL_CODES:
+        assert code in out
+
+
+def test_cli_rejects_unknown_code():
+    with pytest.raises(SystemExit):
+        main([str(FIXTURES / "jg001_pos.py"), "--select", "JG999"])
+
+
+# --------------------------------------------------------------------------
+# the blocking CI contract: today's src/ scans clean
+# --------------------------------------------------------------------------
+def test_src_tree_scans_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.jaxguard", "src/"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_unparseable_file_is_surfaced():
+    findings = analyze_source("bad.py", "def broken(:\n")
+    assert findings and findings[0].code == "JG002"
+    assert "does not parse" in findings[0].message

@@ -1,0 +1,23 @@
+"""jaxguard — JAX-hazard static analysis for this repo.
+
+An AST-based lint pass over the JAX-specific silent failure modes that
+grow with fleet machinery: PRNG key reuse (JG001), per-call re-jitting
+(JG002), broken static-argument declarations (JG003), per-iteration
+constant transfers (JG004), shared mutable defaults (JG005), donated
+buffers read after the donating call (JG006), and host syncs inside
+jitted code (JG007).
+
+    python -m tools.jaxguard src/ --json artifacts/jaxguard.json
+
+Rule catalog + per-rule example diffs: docs/static_analysis.md.  The
+runtime counterpart (transfer guards, the jit-cache-miss sentinel, NaN
+sweeps) lives in ``repro.diagnostics``.
+"""
+from tools.jaxguard.report import (Finding, SCHEMA_VERSION, render_json,
+                                   render_text)
+from tools.jaxguard.rules import RULES, Rule
+from tools.jaxguard.visitors import Analyzer, analyze_source
+from tools.jaxguard.cli import main, scan
+
+__all__ = ["Analyzer", "Finding", "RULES", "Rule", "SCHEMA_VERSION",
+           "analyze_source", "main", "render_json", "render_text", "scan"]

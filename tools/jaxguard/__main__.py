@@ -1,0 +1,3 @@
+from tools.jaxguard.cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,86 @@
+"""jaxguard command line: scan paths, print findings, write the JSON
+artifact, exit nonzero when anything is flagged.
+
+    python -m tools.jaxguard src/ --json artifacts/jaxguard.json
+    python -m tools.jaxguard src/repro/core/agent.py --select JG001,JG006
+    python -m tools.jaxguard --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from tools.jaxguard.report import (Finding, render_json, render_text,
+                                   write_json)
+from tools.jaxguard.rules import RULES, validate_codes
+from tools.jaxguard.visitors import analyze_source
+
+_SKIP_DIRS = {"__pycache__", ".git", "artifacts"}
+
+
+def iter_py_files(paths: list[str]) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            files += [f for f in sorted(path.rglob("*.py"))
+                      if not (set(f.parts) & _SKIP_DIRS)]
+        elif path.suffix == ".py":
+            files.append(path)
+        else:
+            raise SystemExit(f"jaxguard: not a python file or directory: {p}")
+    return files
+
+
+def scan(paths: list[str],
+         select: set[str] | None = None) -> tuple[list[Finding], int]:
+    findings: list[Finding] = []
+    files = iter_py_files(paths)
+    for f in files:
+        findings += analyze_source(str(f), f.read_text(), select=select)
+    return findings, len(files)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.jaxguard",
+        description="JAX-hazard static analysis (rule catalog: "
+                    "docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="*", help="files or directories to scan")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the versioned JSON report here")
+    ap.add_argument("--select", default=None, metavar="CODES",
+                    help="comma-separated rule codes to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, rule in sorted(RULES.items()):
+            print(f"{code} [{rule.name}]\n    {rule.summary}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (or use --list-rules)")
+
+    select = None
+    if args.select:
+        try:
+            select = validate_codes(args.select.split(","))
+        except ValueError as e:
+            ap.error(str(e))
+    findings, n_files = scan(args.paths, select=select)
+    text = render_text(findings)
+    if text:
+        print(text)
+    else:
+        print(f"jaxguard: {n_files} file(s) clean")
+    if args.json:
+        out = write_json(render_json(findings, args.paths, n_files),
+                         args.json)
+        print(f"wrote {out}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

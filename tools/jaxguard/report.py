@@ -1,0 +1,69 @@
+"""Findings + report rendering (text for terminals, JSON for CI artifacts).
+
+The JSON schema is versioned and pinned by tests/test_jaxguard.py — bump
+``SCHEMA_VERSION`` when a field changes shape so downstream consumers
+(the CI artifact, dashboards) can dispatch on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from tools.jaxguard.rules import RULES
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at one source location (1-indexed line/col)."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    @property
+    def rule_name(self) -> str:
+        return RULES[self.code].name
+
+    def to_dict(self) -> dict:
+        return {"code": self.code, "rule": self.rule_name, "path": self.path,
+                "line": self.line, "col": self.col, "message": self.message}
+
+
+def render_text(findings: list[Finding]) -> str:
+    lines = [f"{f.path}:{f.line}:{f.col}: {f.code} [{f.rule_name}] "
+             f"{f.message}" for f in sorted(findings)]
+    counts = count_by_code(findings)
+    if findings:
+        total = ", ".join(f"{code}={n}" for code, n in sorted(counts.items()))
+        lines.append(f"jaxguard: {len(findings)} finding(s) ({total})")
+    return "\n".join(lines)
+
+
+def count_by_code(findings: list[Finding]) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f.code] = counts.get(f.code, 0) + 1
+    return counts
+
+
+def render_json(findings: list[Finding], roots: list[str],
+                files_scanned: int) -> dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "roots": list(roots),
+        "files_scanned": files_scanned,
+        "findings": [f.to_dict() for f in sorted(findings)],
+        "counts": count_by_code(findings),
+    }
+
+
+def write_json(report: dict, path: str | pathlib.Path) -> pathlib.Path:
+    out = pathlib.Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    return out

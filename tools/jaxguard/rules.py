@@ -1,0 +1,69 @@
+"""The jaxguard rule catalog.
+
+Each rule names one JAX-specific silent failure mode.  The catalog is the
+single source of truth: the CLI's ``--list-rules``, the ``--select``
+validation, docs/static_analysis.md, and the JSON report all key on these
+codes.  Detection logic lives in visitors.py; this module is pure data.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    summary: str
+
+
+RULES: dict[str, Rule] = {
+    r.code: r for r in (
+        Rule("JG001", "key-reuse-after-split",
+             "a PRNG key is used again after jax.random.split consumed it "
+             "(or is split inside a loop without rebinding) — the derived "
+             "streams are correlated, silently breaking seed independence"),
+        Rule("JG002", "jit-in-function",
+             "jax.jit / jax.pmap constructed inside a function body or "
+             "jax.vmap built inside a loop — a fresh wrapper means a fresh "
+             "trace cache, so every call re-traces and re-compiles; hoist "
+             "to module scope, a decorator, or an lru_cache'd builder"),
+        Rule("JG003", "bad-static-args",
+             "static_argnames/static_argnums that do not match the jitted "
+             "function's signature, or a static parameter with an "
+             "unhashable (mutable) default — jit either ignores the "
+             "intended static or dies on hashing at call time"),
+        Rule("JG004", "scalar-constant-in-loop",
+             "a jnp array is constructed from Python literals inside a "
+             "Python loop — one host-to-device transfer per iteration for "
+             "a value that never changes; hoist it out of the loop"),
+        Rule("JG005", "mutable-default",
+             "a mutable default argument (list/dict/set display or an "
+             "object constructed in the signature) on a function or a "
+             "pytree dataclass field — the single instance is shared "
+             "across every call/instance"),
+        Rule("JG006", "donated-buffer-reuse",
+             "an argument passed at a donate_argnums position is read "
+             "again after the donating call — the buffer was handed to "
+             "XLA and may alias the outputs; copy what you need first"),
+        Rule("JG007", "host-sync-in-jit",
+             "float()/int()/bool()/.item()/np.asarray on a traced value "
+             "inside a jitted (or scan/vmap-traced) function — either a "
+             "ConcretizationTypeError at trace time or a silent "
+             "device-to-host sync that serializes the program"),
+    )
+}
+
+
+def validate_codes(codes) -> set[str]:
+    """Normalize + validate a user-supplied code collection."""
+    out = set()
+    for c in codes:
+        c = c.strip().upper()
+        if not c:
+            continue
+        if c not in RULES:
+            raise ValueError(
+                f"unknown jaxguard rule {c!r}; known: {sorted(RULES)}")
+        out.add(c)
+    return out

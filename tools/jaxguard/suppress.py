@@ -1,0 +1,55 @@
+"""Suppression-comment handling.
+
+Two forms, both case-insensitive in the ``jaxguard`` tag:
+
+* line-level — a trailing comment on the flagged line:
+      x = jax.jit(f)  # jaxguard: disable=JG002
+  (multiple codes comma-separated; ``disable=all`` silences every rule on
+  that line)
+* file-level — anywhere in the file, typically near the top:
+      # jaxguard: disable-file=JG004,JG007
+
+Suppressions are matched against the *reported* line of a finding, which
+for multi-line calls is the line the call starts on.
+"""
+from __future__ import annotations
+
+import re
+
+_LINE = re.compile(r"#\s*jaxguard:\s*disable=([A-Za-z0-9,\s]+|all)",
+                   re.IGNORECASE)
+_FILE = re.compile(r"#\s*jaxguard:\s*disable-file=([A-Za-z0-9,\s]+|all)",
+                   re.IGNORECASE)
+
+ALL = "all"
+
+
+def _codes(raw: str) -> set[str]:
+    raw = raw.strip()
+    if raw.lower() == ALL:
+        return {ALL}
+    return {c.strip().upper() for c in raw.split(",") if c.strip()}
+
+
+class Suppressions:
+    """Per-file suppression table: line -> codes, plus file-level codes."""
+
+    def __init__(self, source: str):
+        self.by_line: dict[int, set[str]] = {}
+        self.file_level: set[str] = set()
+        for i, line in enumerate(source.splitlines(), start=1):
+            if "#" not in line:
+                continue
+            m = _FILE.search(line)
+            if m:
+                self.file_level |= _codes(m.group(1))
+                continue
+            m = _LINE.search(line)
+            if m:
+                self.by_line.setdefault(i, set()).update(_codes(m.group(1)))
+
+    def is_suppressed(self, line: int, code: str) -> bool:
+        if ALL in self.file_level or code in self.file_level:
+            return True
+        codes = self.by_line.get(line, ())
+        return ALL in codes or code in codes
