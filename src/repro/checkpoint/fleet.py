@@ -30,6 +30,7 @@ docs/sharded_fleets.md; the bit-exactness contract is pinned by
 tests/test_fleet_checkpoint.py."""
 from __future__ import annotations
 
+import json
 import pathlib
 
 import numpy as np
@@ -100,6 +101,19 @@ class FleetCheckpoint:
     def latest_epoch(self) -> int | None:
         """Newest restorable epoch, or None when the directory is empty."""
         return self._ck.latest_step()
+
+    def has_lane_map(self, epoch: int | None = None) -> bool:
+        """True when the snapshot at ``epoch`` (default: latest) was
+        written by an elastic-lifecycle run (``save(..., lane_map=...)``)
+        — i.e. it must be restored with ``with_lane_map=True`` /
+        ``fleet.lifecycle.restore_elastic``."""
+        self.wait()
+        epoch = self.latest_epoch() if epoch is None else epoch
+        if epoch is None:
+            return False
+        manifest = json.loads(
+            (self._ck.dir / f"step_{epoch:08d}" / "manifest.json").read_text())
+        return any("lanes" in ent["name"] for ent in manifest["leaves"])
 
     def restore(self, agent_states, env_states, keys, epoch: int | None = None,
                 mesh=None, with_lane_map: bool = False):

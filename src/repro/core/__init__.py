@@ -13,6 +13,8 @@ from repro.core.knn_projection import (
     knn_assignments_exact,
     nearest_assignment,
 )
+from repro.core.control_policies import (AutoTuneConfig, RateControlConfig,
+                                         auto_tune_agent, rate_control_agent)
 from repro.core.model_based import ModelBasedScheduler
 from repro.core.placement import (ExpertPlacementEnv, PlacementParams,
                                   jamba_placement_env)
@@ -27,6 +29,8 @@ __all__ = [
     "run_online_ddpg_python", "run_online_dqn_python",
     "knn_actions_exact", "knn_actions_jax", "knn_assignments_exact",
     "nearest_assignment", "ModelBasedScheduler",
+    "AutoTuneConfig", "RateControlConfig",
+    "auto_tune_agent", "rate_control_agent",
     "ExpertPlacementEnv", "PlacementParams", "jamba_placement_env",
     "round_robin", "spaces",
 ]

@@ -182,6 +182,7 @@ def register_agent(name: str, factory: Callable[..., Agent]) -> None:
 def _load_builtins() -> None:
     # Built-in agents self-register at import time; imported lazily to keep
     # this module dependency-free (ddpg/dqn/... all import it).
+    import repro.core.control_policies  # noqa: F401
     import repro.core.ddpg        # noqa: F401
     import repro.core.dqn         # noqa: F401
     import repro.core.model_based  # noqa: F401

@@ -1,0 +1,139 @@
+"""Non-placement control policies: rate control and auto-tuning agents.
+
+The serving control plane dispatches three decision kinds (see
+``core/spaces.py``); placement is served by the learned DDPG/DQN agents,
+and these two deterministic policies serve the other kinds through the
+SAME :class:`~repro.core.api.Agent` contract — module-level pure
+functions over a frozen, hashable config, so they ride the fleet runner,
+the batched serving path, and jit static arguments exactly like the
+learned agents do.
+
+* ``rate_control`` — a feedback throttle (the "Generalised Rate Control"
+  decision kind): from the normalized spout rates in the state vector it
+  picks, per spout, the LARGEST admission level that keeps the admitted
+  load under ``cfg.utilization_cap`` × the cluster's declared base rate —
+  admit as much as possible, backpressure only what overloads.
+* ``auto_tune`` — a model-grounded knob search (the "Auto-tuning ...
+  using RL" decision kind): decodes (X, w) from the state vector, then
+  evaluates every ``TUNE_GRID`` operating point under the CLUSTER'S OWN
+  EnvParams (``repro.dsdps.actions.apply_config_action``) through the
+  queueing model and returns the argmin — a heterogeneous cluster fleet
+  gets per-cluster tunings from one vmapped program.
+
+Both policies decide from ``(s_vec, env_params)`` alone (``env_state`` is
+ignored), which is the serving contract — see serve/control.py."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.dsdps.actions import RATE_LEVELS, TUNE_GRID, decode_state
+from repro.dsdps.env import SchedulingEnv
+from repro.dsdps.simulator import average_tuple_time_from_params
+
+
+# --------------------------------------------------------------------------
+# rate_control
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RateControlConfig:
+    n_spouts: int
+    levels: tuple[float, ...] = RATE_LEVELS     # ascending admission grid
+    utilization_cap: float = 1.0                # max admitted / base rate
+
+
+def _rate_init(key, cfg: RateControlConfig, env_params=None):
+    return jnp.zeros((), jnp.int32)
+
+
+def _rate_select(key, cfg: RateControlConfig, state, s_vec, env_state,
+                 env_params, explore):
+    # the state vector's tail is w / base_rates (SchedulingEnv.state_vector)
+    w_norm = s_vec[-cfg.n_spouts:]                               # [S]
+    levels = jnp.asarray(cfg.levels, jnp.float32)                # [L]
+    admitted = levels[None, :] * w_norm[:, None]                 # [S, L]
+    fits = (admitted <= cfg.utilization_cap).astype(jnp.int32)
+    # largest fitting level; all-overloaded spouts fall back to levels[0]
+    idx = jnp.maximum(fits.sum(axis=1) - 1, 0)
+    action = jax.nn.one_hot(idx, len(cfg.levels), dtype=jnp.float32)
+    return action, idx
+
+
+def _noop_observe(cfg, state, s_vec, aux, reward, s_next):
+    return state
+
+
+def _noop_update(key, cfg, state):
+    return state
+
+
+def _tick(cfg, state):
+    return state + 1
+
+
+def rate_control_agent(cfg: RateControlConfig) -> api.Agent:
+    return api.Agent(name="rate_control", cfg=cfg, init_fn=_rate_init,
+                     select_fn=_rate_select, observe_fn=_noop_observe,
+                     update_fn=_noop_update, tick_fn=_tick)
+
+
+def rate_control_factory(env, **overrides) -> api.Agent:
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = RateControlConfig(n_spouts=env.workload.num_spouts,
+                                **overrides)
+    return rate_control_agent(cfg)
+
+
+api.register_agent("rate_control", rate_control_factory)
+
+
+# --------------------------------------------------------------------------
+# auto_tune
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AutoTuneConfig:
+    env: SchedulingEnv          # hashable by identity (static spec)
+    grid: tuple[tuple[float, float], ...] = TUNE_GRID
+
+
+def _tune_init(key, cfg: AutoTuneConfig, env_params=None):
+    return jnp.zeros((), jnp.int32)
+
+
+def _tune_select(key, cfg: AutoTuneConfig, state, s_vec, env_state,
+                 env_params, explore):
+    env = cfg.env
+    p = env.default_params() if env_params is None else env_params
+    X, w = decode_state(env, s_vec, p)
+    # the grid is static and small: unroll the candidate evaluations
+    lats = jnp.stack([
+        average_tuple_time_from_params(
+            X, w,
+            p._replace(acker_ms=p.acker_ms * acker_scale,
+                       tuple_bytes=p.tuple_bytes * batch_scale),
+            env.params, env.cluster)
+        for acker_scale, batch_scale in cfg.grid
+    ])
+    action = jax.nn.one_hot(jnp.argmin(lats), len(cfg.grid),
+                            dtype=jnp.float32)
+    return action, lats
+
+
+def auto_tune_agent(cfg: AutoTuneConfig) -> api.Agent:
+    return api.Agent(name="auto_tune", cfg=cfg, init_fn=_tune_init,
+                     select_fn=_tune_select, observe_fn=_noop_observe,
+                     update_fn=_noop_update, tick_fn=_tick)
+
+
+def auto_tune_factory(env, **overrides) -> api.Agent:
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = AutoTuneConfig(env=env, **overrides)
+    return auto_tune_agent(cfg)
+
+
+api.register_agent("auto_tune", auto_tune_factory)

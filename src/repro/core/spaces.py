@@ -2,8 +2,18 @@
 
 Action a ∈ {0,1}^{N×M} with row-simplex constraints Σ_j a_ij = 1;
 state s = (X, w).  Helpers here are shared by agents, tests, and the
-property-based invariants."""
+property-based invariants.
+
+The module also carries the ACTION-SPACE REGISTRY: the serving control
+plane (serve/control.py) dispatches decision kinds by name, and each kind
+is an :class:`ActionSpace` — its per-env action shape, its feasibility
+predicate, and the registered default agent that serves it.  Builtins:
+``placement`` (the paper's [N, M] assignment), ``rate_control`` (per-spout
+admission throttles) and ``auto_tune`` (config-knob operating points),
+whose simulator semantics live in ``repro.dsdps.actions``."""
 from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -32,3 +42,63 @@ def hamming_moves(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 def action_space_size(n_executors: int, n_machines: int) -> int:
     return n_machines ** n_executors
+
+
+# --------------------------------------------------------------------------
+# Action-space registry — the decision surface the serving control plane
+# dispatches over.  Every space's actions are one-hot rows, so the single
+# MIQP-NN predicate above validates all of them (a 1-D action is one row).
+# --------------------------------------------------------------------------
+class ActionSpace(NamedTuple):
+    """One decision kind: name, per-env action shape, feasibility test,
+    and the registry name of the agent that serves it by default."""
+
+    name: str
+    shape_fn: Callable[[Any], tuple[int, ...]]
+    feasible_fn: Callable[[jnp.ndarray], jnp.ndarray]
+    default_agent: str
+
+
+_ACTION_SPACES: dict[str, ActionSpace] = {}
+
+
+def register_action_space(space: ActionSpace) -> None:
+    """Register a decision kind for ``action_space(name)`` lookup (and
+    therefore for ``serve.control.ControlPlane(kind=name)``)."""
+    _ACTION_SPACES[space.name] = space
+
+
+def action_space(name: str) -> ActionSpace:
+    try:
+        return _ACTION_SPACES[name]
+    except KeyError:
+        raise KeyError(f"unknown action space {name!r}; "
+                       f"known: {sorted(_ACTION_SPACES)}") from None
+
+
+def action_space_names() -> tuple[str, ...]:
+    return tuple(sorted(_ACTION_SPACES))
+
+
+def _placement_shape(env) -> tuple[int, ...]:
+    return (env.N, env.M)
+
+
+def _rate_shape(env) -> tuple[int, ...]:
+    # lazy import: spaces is a core leaf module; the rate grid lives with
+    # its simulator semantics in dsdps
+    from repro.dsdps.actions import RATE_LEVELS
+    return (env.workload.num_spouts, len(RATE_LEVELS))
+
+
+def _tune_shape(env) -> tuple[int, ...]:
+    from repro.dsdps.actions import TUNE_GRID
+    return (len(TUNE_GRID),)
+
+
+register_action_space(ActionSpace("placement", _placement_shape,
+                                  is_feasible, "ddpg"))
+register_action_space(ActionSpace("rate_control", _rate_shape,
+                                  is_feasible, "rate_control"))
+register_action_space(ActionSpace("auto_tune", _tune_shape,
+                                  is_feasible, "auto_tune"))

@@ -11,9 +11,10 @@ from repro.dsdps.simulator import (EnvParams, SimParams,
                                    with_straggler)
 from repro.dsdps.workload import WorkloadProcess, step_rates
 from repro.dsdps.env import EnvState, SchedulingEnv, StepOut
-from repro.dsdps import apps, scenarios
+from repro.dsdps import actions, apps, scenarios
 
 __all__ = [
+    "actions",
     "Component", "Edge", "Topology", "ClusterSpec", "PAPER_CLUSTER",
     "SimParams", "EnvParams", "average_tuple_time_ms",
     "average_tuple_time_from_params", "build_sim_params", "to_env_params",

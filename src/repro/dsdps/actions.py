@@ -1,0 +1,94 @@
+"""Decision semantics beyond placement: rate control and auto-tuning.
+
+The paper's action is an executor→machine assignment, but the same
+model-free control loop generalises to the two adjacent decision kinds in
+the literature (PAPERS.md): *rate control* — per-spout admission
+throttles, "Generalised Rate Control for Stream Processing Applications"
+— and *auto-tuning* — runtime config knobs, "Auto-tuning Distributed
+Stream Processing Systems using RL".  Both act on the SAME simulator: a
+decision is a pure edit of the :class:`~repro.dsdps.simulator.EnvParams`
+pytree (scale ``base_rates``; scale ``acker_ms`` / ``tuple_bytes``), so
+applying an action is traced, vmappable, and rides the scenario-fleet
+machinery unchanged.
+
+Encodings (both one-hot, so the MIQP-NN row-simplex feasibility predicate
+from ``core/spaces.py`` applies):
+
+* rate_control — ``[S, L]``: row s one-hot over :data:`RATE_LEVELS`,
+  a discrete throttle grid of admission multipliers for spout s.
+* auto_tune   — ``[K]``: one-hot over :data:`TUNE_GRID`, joint
+  (acker overhead scale, tuple batch-size scale) operating points.
+
+``decode_state`` recovers the simulator state (X, w) from the flattened
+state vector the DNNs see — the serving control plane receives only
+``(s_vec, cluster params)`` per request, and model-grounded policies
+(``core/control_policies.py``) re-ground the decision in the queueing
+model from exactly that."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.dsdps.simulator import EnvParams
+
+# Admission throttle grid: fraction of the offered spout load admitted.
+# 1.0 = no throttling; the levels match the coarse-grained backpressure
+# settings a Storm operator can actually deploy.
+RATE_LEVELS: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+
+# Auto-tuning knob grid: (acker_scale, batch_scale) operating points.
+# acker_scale scales the per-tuple ack/bookkeeping overhead (Storm's
+# acker-executor setting: fewer ackers = less bookkeeping, weaker
+# delivery guarantees); batch_scale scales tuple_bytes (transfer
+# batching: bigger batches amortise per-tuple framing but pay
+# serialization + wire time on every cross-machine hop).
+TUNE_GRID: tuple[tuple[float, float], ...] = (
+    (1.0, 1.0),     # declared configuration
+    (0.5, 1.0),     # halve ack bookkeeping
+    (0.25, 1.0),    # minimal acking
+    (1.0, 0.5),     # smaller transfer batches
+    (1.0, 2.0),     # bigger transfer batches
+    (0.5, 0.5),     # both: low-latency profile
+)
+
+
+def rate_multipliers(action: jnp.ndarray,
+                     levels: tuple[float, ...] = RATE_LEVELS) -> jnp.ndarray:
+    """[S, L] one-hot rate action -> [S] admission multipliers."""
+    return action @ jnp.asarray(levels, jnp.float32)
+
+
+def apply_rate_action(params: EnvParams, action: jnp.ndarray,
+                      levels: tuple[float, ...] = RATE_LEVELS) -> EnvParams:
+    """Throttle each spout's offered load by its selected level (pure
+    EnvParams edit — traced and vmappable)."""
+    return params._replace(
+        base_rates=params.base_rates * rate_multipliers(action, levels))
+
+
+def tune_settings(action: jnp.ndarray,
+                  grid: tuple[tuple[float, float], ...] = TUNE_GRID
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[K] one-hot tune action -> (acker_scale, batch_scale) scalars."""
+    g = jnp.asarray(grid, jnp.float32)                    # [K, 2]
+    picked = action @ g                                   # [2]
+    return picked[0], picked[1]
+
+
+def apply_config_action(params: EnvParams, action: jnp.ndarray,
+                        grid: tuple[tuple[float, float], ...] = TUNE_GRID
+                        ) -> EnvParams:
+    """Apply one auto-tuning operating point (pure EnvParams edit)."""
+    acker_scale, batch_scale = tune_settings(action, grid)
+    return params._replace(acker_ms=params.acker_ms * acker_scale,
+                           tuple_bytes=params.tuple_bytes * batch_scale)
+
+
+def decode_state(env, s_vec: jnp.ndarray,
+                 params: EnvParams) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Invert ``SchedulingEnv.state_vector``: the flattened DNN state back
+    to (X [N, M], w [S]).  The state vector is ``concat(X.reshape(-1),
+    w / base_rates)``, so the cluster's params pin the rate scale."""
+    nm = env.N * env.M
+    X = s_vec[:nm].reshape(env.N, env.M)
+    w = s_vec[nm:] * (params.base_rates + 1e-9)
+    return X, w

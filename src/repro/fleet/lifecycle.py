@@ -130,13 +130,18 @@ class ElasticResult:
     so downstream seed-band plotting keeps working; ``epochs_run[i]``
     says where lane i's real trace ends.  ``executed_lane_epochs`` counts
     every lane-epoch actually executed — passengers included — which is
-    what ``fleet_bench --lifecycle`` compares against the fixed grid."""
+    what ``fleet_bench --lifecycle`` compares against the fixed grid.
+    ``lane_ids[i]`` names row i's lane in the RUN THAT STARTED the
+    lifecycle — a fresh run numbers 0..F-1; a run resumed from a
+    compacted snapshot (:func:`restore_elastic`) keeps the original
+    numbering of the surviving lanes."""
 
     states: Any                     # [F] stacked agent states
     history: History                # [F, T] padded traces
     epochs_run: np.ndarray          # [F] epochs each lane really executed
     executed_lane_epochs: int
     fixed_grid_lane_epochs: int
+    lane_ids: np.ndarray = None     # [F] original lane names
 
     @property
     def savings(self) -> float:
@@ -160,6 +165,7 @@ def run_online_fleet_elastic(
     checkpoint=None,
     start_epoch: int = 0,
     stop_fn: Callable[[np.ndarray, int], np.ndarray] | None = None,
+    lane_ids: np.ndarray | None = None,
 ) -> ElasticResult:
     """``run_online_fleet`` with the elastic lane lifecycle.
 
@@ -178,7 +184,12 @@ def run_online_fleet_elastic(
 
     ``stop_fn(rewards_so_far, t) -> done[n_live]`` overrides the plateau
     test (rows are the live lanes' full ``[n_live, t]`` reward history) —
-    the hook custom convergence criteria and the bit-match tests use."""
+    the hook custom convergence criteria and the bit-match tests use.
+
+    ``lane_ids`` names the lanes in the ORIGINAL run's numbering — pass
+    the ids :func:`restore_elastic` returns when resuming a compacted
+    snapshot, so checkpoint lane maps and the result's lane accounting
+    keep referring to the original lanes across kill/resume cycles."""
     from repro.core.agent import _require_agent
     agent = _require_agent(agent)
     rule = rule if rule is not None else StopRule()
@@ -202,7 +213,11 @@ def run_online_fleet_elastic(
     final_X: list[Any] = [None] * F
 
     # -- compact-fleet bookkeeping ------------------------------------------
-    orig = np.arange(F)              # compact position -> original lane
+    orig = np.arange(F)              # compact position -> row in this run
+    ids = (np.arange(F) if lane_ids is None
+           else np.asarray(lane_ids, np.int64))  # row -> ORIGINAL lane name
+    if ids.shape != (F,):
+        raise ValueError(f"lane_ids must be [{F}], got {ids.shape}")
     live = np.ones(F, bool)          # False = passenger (already captured)
     executed = 0
     t = 0
@@ -233,7 +248,7 @@ def run_online_fleet_elastic(
         moved_buf[rows, t:t + n] = m[live]
         t += n
         if checkpoint is not None:
-            lane_map = np.where(live, orig, -1).astype(np.int32)
+            lane_map = np.where(live, ids[orig], -1).astype(np.int32)
             checkpoint.save(start_epoch + t, states, env_states, keys,
                             lane_map=lane_map)
         if t >= T:
@@ -291,7 +306,57 @@ def run_online_fleet_elastic(
     return ElasticResult(states=states_out, history=history,
                          epochs_run=epochs_run,
                          executed_lane_epochs=executed,
-                         fixed_grid_lane_epochs=F * T)
+                         fixed_grid_lane_epochs=F * T,
+                         lane_ids=ids)
+
+
+def restore_elastic(checkpoint, states_like, env_states_like, keys_like,
+                    env_params=None, ref=None, epoch: int | None = None,
+                    mesh=None):
+    """Restore a COMPACTED elastic-lifecycle snapshot for resumption.
+
+    Elastic runs checkpoint their compacted carries with a ``lane_map``
+    naming each row's original lane (``-1`` = passenger: a lane that
+    already stopped and whose row continued past its stop epoch as
+    divisibility padding — its checkpointed state is NOT authoritative).
+    This helper restores the snapshot via ``FleetCheckpoint.restore(...,
+    with_lane_map=True)``, DROPS the passenger rows, and — given the
+    original run's stacked ``env_params`` scenario fleet plus its
+    single-scenario ``ref`` — gathers the surviving lanes' scenario rows
+    (broadcast-invariant leaves pass through single-copy).
+
+    The ``*_like`` templates only supply tree STRUCTURE (the generic
+    checkpointer takes shapes from the manifest), so templates built for
+    the original full-size fleet restore any compacted snapshot.
+
+    Returns ``(epoch, keys, states, env_states, env_params, lane_ids)``;
+    feed everything straight back into :func:`run_online_fleet_elastic`
+    with ``start_epoch=epoch`` and ``lane_ids=lane_ids``."""
+    epoch, states, env_states, keys, lane_map = checkpoint.restore(
+        states_like, env_states_like, keys_like, epoch=epoch, mesh=mesh,
+        with_lane_map=True)
+    lane_map = np.asarray(lane_map)
+    rows = np.flatnonzero(lane_map >= 0)
+    ids = lane_map[rows].astype(np.int64)
+    with jax.transfer_guard("allow"):
+        take = jnp.asarray(rows)
+        gather = lambda t: jax.tree.map(
+            lambda x: jnp.take(jnp.asarray(x), take, axis=0), t)
+        states, env_states = gather(states), gather(env_states)
+        keys = jnp.take(jnp.asarray(keys), take, axis=0)
+        if env_params is not None:
+            if ref is None:
+                raise ValueError("restoring with env_params= needs ref= "
+                                 "(the env's default_params()) to tell "
+                                 "stacked leaves from invariant ones")
+            flat, treedef = jax.tree_util.tree_flatten(env_params)
+            ref_flat = jax.tree_util.tree_leaves(ref)
+            pick = jnp.asarray(ids)
+            picked = [jnp.take(p, pick, axis=0)
+                      if jnp.ndim(p) == jnp.ndim(r) + 1 else p
+                      for p, r in zip(flat, ref_flat)]
+            env_params = jax.tree_util.tree_unflatten(treedef, picked)
+    return epoch, keys, states, env_states, env_params, ids
 
 
 # --------------------------------------------------------------------------

@@ -125,6 +125,13 @@ def main() -> None:
                          "rung")
     ap.add_argument("--search-json", default="artifacts/scenario_search.json",
                     help="leaderboard artifact path for --scenario-search")
+    ap.add_argument("--serve", type=int, default=0, metavar="N",
+                    help="after training, serve N synthetic decision "
+                         "requests from the best lane's trained policy "
+                         "through the batched serving control plane — "
+                         "every training lane's scenario becomes a "
+                         "registered cluster (repro.serve.control, "
+                         "docs/serving.md)")
     ap.add_argument("--guards", action="store_true",
                     help="run the online-learning phase under the runtime "
                          "tracing-discipline guards (repro.diagnostics): "
@@ -137,10 +144,18 @@ def main() -> None:
     if args.agent == "model_based" and args.app == "placement":
         ap.error("model_based profiles a DSDPS cluster; use it with the "
                  "Storm apps")
-    if args.early_stop and args.resume:
-        ap.error("--early-stop checkpoints a compacted fleet; resuming one "
-                 "needs FleetCheckpoint.restore(..., with_lane_map=True) — "
-                 "not wired into --resume yet (see docs/elastic_fleets.md)")
+    if args.agent in ("rate_control", "auto_tune"):
+        ap.error(f"{args.agent} is a serving-side decision policy (its "
+                 f"actions are not placements) — it runs behind the "
+                 f"serving control plane: repro.launch.serve_control, or "
+                 f"--serve N after training (docs/serving.md)")
+    if args.serve and args.app == "placement":
+        ap.error("--serve drives the DSDPS control plane; use it with the "
+                 "Storm apps")
+    if args.serve and args.agent not in ("ddpg", "round_robin"):
+        ap.error(f"--serve needs an agent that decides from (s_vec, "
+                 f"cluster params) alone; {args.agent}'s select reads the "
+                 f"live EnvState (see docs/serving.md)")
     if args.scenario_search:
         for flag, on in (("--sharded", args.sharded),
                          ("--checkpoint-dir", args.checkpoint_dir),
@@ -202,17 +217,44 @@ def main() -> None:
     ck = (FleetCheckpoint(args.checkpoint_dir, every=args.checkpoint_every)
           if args.checkpoint_dir else None)
     keys = jax.random.split(jax.random.fold_in(key, 2), args.fleet)
-    env_states, start_epoch, restored = None, 0, False
+    env_states, start_epoch, restored, lane_ids = None, 0, False, None
     if args.resume:
         if ck is None:
             ap.error("--resume needs --checkpoint-dir")
         if ck.latest_epoch() is not None:
             like_env = reset_fleet_states(keys, env, env_params)
-            start_epoch, states, env_states, keys = ck.restore(
-                states, like_env, keys, mesh=mesh)
-            restored = True
-            print(f"resuming from checkpoint epoch {start_epoch} "
-                  f"({ck.directory})")
+            if ck.has_lane_map():
+                # elastic-lifecycle snapshot: the saved fleet is COMPACTED
+                # (possibly padded with passenger lanes) — restore through
+                # the lane map, drop passengers, and subset the scenario
+                # fleet to the surviving original lanes
+                if not args.early_stop:
+                    ap.error(f"{ck.directory} holds elastic-lifecycle "
+                             f"(compacted) snapshots; resume with "
+                             f"--early-stop")
+                from repro.fleet.lifecycle import restore_elastic
+                (start_epoch, keys, states, env_states, env_params,
+                 lane_ids) = restore_elastic(
+                    ck, states, like_env, keys, env_params=env_params,
+                    ref=(env.default_params() if env_params is not None
+                         else None))
+                restored = True
+                if mesh is not None and \
+                        int(keys.shape[0]) % fleet_size(mesh) != 0:
+                    print(f"{int(keys.shape[0])} surviving lane(s) do not "
+                          f"divide the {fleet_size(mesh)} data-axis "
+                          f"devices; falling back to the un-sharded vmap "
+                          f"runner")
+                    mesh = None
+                print(f"resuming compacted elastic fleet from epoch "
+                      f"{start_epoch}: {len(lane_ids)} surviving lane(s) "
+                      f"{lane_ids.tolist()} ({ck.directory})")
+            else:
+                start_epoch, states, env_states, keys = ck.restore(
+                    states, like_env, keys, mesh=mesh)
+                restored = True
+                print(f"resuming from checkpoint epoch {start_epoch} "
+                      f"({ck.directory})")
         if start_epoch >= args.epochs:
             print(f"checkpoint already at epoch {start_epoch} >= "
                   f"--epochs {args.epochs}; nothing left to run")
@@ -229,11 +271,12 @@ def main() -> None:
             n_samples=args.offline, n_updates=args.offline_updates,
             env_params=env_params)
 
+    fleet_now = int(jnp.asarray(keys).shape[0])
     scen = f" ({args.scenario} scenario fleet)" if args.scenario else ""
     where = (f" sharded over {mesh.devices.size} devices" if mesh is not None
              else "")
     stop = " with per-lane early stopping" if args.early_stop else ""
-    print(f"online learning: {args.agent} fleet of {args.fleet} x "
+    print(f"online learning: {args.agent} fleet of {fleet_now} x "
           f"{args.epochs - start_epoch} decision epochs in one batched "
           f"scan{scen}{where}{stop} ...")
     if args.guards:
@@ -251,10 +294,13 @@ def main() -> None:
             result = run_online_fleet_elastic(
                 keys, env, agent, states, T=args.epochs - start_epoch,
                 rule=StopRule(), env_params=env_params, env_states=env_states,
-                mesh=mesh, checkpoint=ck, start_epoch=start_epoch)
+                mesh=mesh, checkpoint=ck, start_epoch=start_epoch,
+                lane_ids=lane_ids)
             states, hist = result.states, result.history
+            lanes = (f" (original lanes {result.lane_ids.tolist()})"
+                     if lane_ids is not None else "")
             print(f"early stopping: per-lane epochs "
-                  f"{result.epochs_run.tolist()} "
+                  f"{result.epochs_run.tolist()}{lanes} "
                   f"— {result.executed_lane_epochs} lane-epochs executed vs "
                   f"{result.fixed_grid_lane_epochs} fixed-grid "
                   f"({result.savings:.0%} saved)")
@@ -274,7 +320,8 @@ def main() -> None:
     # so the improvement column compares like with like per lane)
     finals, rrs = [], []
     X_rr = env.round_robin_assignment()
-    for f in range(args.fleet):
+    n_lanes = int(np.asarray(hist.final_assignment).shape[0])
+    for f in range(n_lanes):
         if env_params is not None:
             lane_p = lane_params(env_params, env.default_params(), f)
             w_f = (lane_p.base_rates if hasattr(lane_p, "base_rates")
@@ -296,13 +343,40 @@ def main() -> None:
     # when lanes run heterogeneous scenarios
     best = int((finals / rrs).argmin())
     print(f"\nfinal latency {finals.mean():.3f} ± {finals.std():.3f} ms "
-          f"over {args.fleet} lanes "
+          f"over {n_lanes} lanes "
           f"(best lane {best}: {finals[best]:.3f} ms)   "
           f"round-robin {rrs.mean():.3f} ms   "
           f"improvement {1 - finals.mean() / rrs.mean():.1%} mean / "
           f"{1 - finals[best] / rrs[best]:.1%} best")
     print("best assignment (executor -> machine):",
           hist.final_assignment[best].argmax(-1).tolist())
+
+    if args.serve:
+        # serve the TRAINED policy through the batched control plane: the
+        # best lane's agent state answers placement requests, each
+        # training lane's scenario is a registered live cluster, and the
+        # rate_control / auto_tune planes ride along (docs/serving.md)
+        from repro.launch.serve_control import (build_service,
+                                                synthetic_requests)
+        best_state = jax.tree.map(lambda x: x[best], states)
+        svc = build_service(env, seed=args.seed, n_slots=min(8, args.serve),
+                            placement_agent=agent,
+                            placement_state=best_state)
+        for f in range(n_lanes):
+            svc.register_cluster(
+                f"lane-{f}",
+                lane_params(env_params, env.default_params(), f)
+                if env_params is not None else None)
+        for r in synthetic_requests(env, svc, args.serve, seed=args.seed):
+            svc.submit(r)
+        print(f"\nserving {args.serve} decision requests from the trained "
+              f"policy across {n_lanes} cluster(s) ...")
+        served = svc.run(jax.random.fold_in(key, 3))
+        for kind, stats in svc.decision_stats().items():
+            print(f"  {kind:13s} n={stats['n']:4d}  "
+                  f"p50 {stats['p50_ms']:8.3f} ms  "
+                  f"p99 {stats['p99_ms']:8.3f} ms")
+        assert len(served) == args.serve
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Public serving surface.
+
+Two families live here:
+
+* LM token serving — :class:`~repro.serve.engine.Engine` (static batch)
+  and :class:`~repro.serve.continuous.ContinuousBatcher` (slot
+  admission/eviction over a fixed pool).
+* The scheduling control plane — :class:`~repro.serve.control.ControlPlane`
+  / :class:`~repro.serve.control.ControlService`, the same slot scheduler
+  adapted from tokens to batched low-latency scheduling decisions for
+  many live clusters (docs/serving.md).
+"""
+from repro.serve.continuous import ContinuousBatcher, Request
+from repro.serve.control import (ControlPlane, ControlService,
+                                 DecisionRequest, batched_select_program,
+                                 latency_stats, nearest_rank_percentile,
+                                 single_select_program)
+from repro.serve.engine import (Engine, SamplingParams, jitted_serve_step,
+                                sample_token)
+
+__all__ = [
+    "Engine", "SamplingParams", "jitted_serve_step", "sample_token",
+    "ContinuousBatcher", "Request",
+    "ControlPlane", "ControlService", "DecisionRequest",
+    "batched_select_program", "single_select_program",
+    "latency_stats", "nearest_rank_percentile",
+]

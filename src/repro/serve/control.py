@@ -1,0 +1,378 @@
+"""Serving control plane: batched low-latency decisions for many clusters.
+
+The paper's end state is *online control* — a trained policy continuously
+issuing scheduling decisions to live DSDPS clusters, where decision
+latency is part of the control loop.  This module is the inference-side
+counterpart of the fleet trainer: a :class:`ControlPlane` accepts
+concurrent per-cluster :class:`DecisionRequest`\\ s (state vector +
+cluster id), batches every active request into ONE jitted
+``Agent.select`` call, and streams :class:`DecisionRequest` results back.
+
+The scheduler is the slot-admission/eviction design of
+``serve/continuous.py`` (ContinuousBatcher) adapted from LM tokens to
+scheduling decisions: a FIFO queue feeds a fixed pool of batch slots,
+each engine step serves every active slot in one dispatch, and — because
+a scheduling decision completes in a single step, unlike a token stream —
+every served slot retires immediately and is recycled on the next
+admission pass.  The batch width is therefore ``min(n_slots, backlog)``
+every step, and queueing delay (not just compute) shows up in the
+reported latency percentiles, exactly as in a real service.
+
+Heterogeneous clusters share one XLA program: each registered cluster's
+:class:`~repro.dsdps.simulator.EnvParams` joins a
+``stack_env_params(..., broadcast_invariant=True)`` stack, the jitted
+program gathers each slot's cluster row with a ``[n_slots]`` int32
+index, and ``params_in_axes`` drives the vmap — invariant leaves
+(routing, flow_solve, ...) stay single-copy and broadcast.  On
+accelerator backends the per-step input buffers (keys + state-vector
+batch) are donated; agent state and the cluster stack are long-lived and
+never donated.
+
+The serving contract is ``select(s_vec, cluster params)``: the decision
+policies it dispatches (``ddpg`` placement, ``rate_control``,
+``auto_tune`` — see ``core/spaces.py``) decide from the state vector and
+the cluster's parameters alone.  Agents whose select needs a live
+``EnvState`` (dqn's incremental move, model_based's search) are not
+servable through this path.
+
+Steady-state discipline: a plane exposes its jitted program for
+``diagnostics.guards(track=...)`` — after warmup, serving any request mix
+over a FIXED cluster registry compiles exactly once (asserted in
+tests/test_control_plane.py and the launch entry points).  Registering a
+new cluster changes the stack's shapes and costs one recompile."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spaces
+from repro.core.api import Agent
+from repro.dsdps.simulator import params_in_axes, stack_env_params
+
+
+# --------------------------------------------------------------------------
+# Request / decision types
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class DecisionRequest:
+    """One cluster's ask for a decision.
+
+    Submit with ``rid``/``cluster``/``s_vec`` (and ``kind`` when routing
+    through a multi-kind :class:`ControlService`); the plane fills
+    ``action`` / ``latency_ms`` / ``done`` when the decision is served.
+    ``latency_ms`` is submit→decision wall time — queueing included."""
+
+    rid: int
+    cluster: str
+    s_vec: Any                       # [state_dim] float32
+    kind: str | None = None
+    action: Any = None               # np.ndarray once decided
+    latency_ms: float = 0.0
+    submitted_at: float = 0.0
+    done: bool = False
+
+
+def nearest_rank_percentile(samples, q: float) -> float:
+    """Deterministic nearest-rank percentile (no interpolation): the
+    smallest sample with at least q% of the trace at or below it."""
+    if not len(samples):
+        raise ValueError("percentile of an empty trace")
+    xs = sorted(float(x) for x in samples)
+    rank = max(1, math.ceil(q / 100.0 * len(xs)))
+    return xs[rank - 1]
+
+
+def latency_stats(samples_ms) -> dict:
+    """p50/p99/mean over a latency trace (ms) — the serve_bench schema."""
+    samples = [float(x) for x in samples_ms]
+    return {
+        "n": len(samples),
+        "p50_ms": nearest_rank_percentile(samples, 50.0),
+        "p99_ms": nearest_rank_percentile(samples, 99.0),
+        "mean_ms": sum(samples) / len(samples),
+    }
+
+
+# --------------------------------------------------------------------------
+# Jitted select programs — module-level lru_cache'd builders (a
+# per-instance jax.jit would start every plane with a cold trace cache,
+# and an inline jit would re-wrap per call: the serve/engine.py pattern).
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def single_select_program(agent: Agent, explore: bool = False):
+    """One request's ``Agent.select`` as a jitted program — the
+    sequential baseline path serve_bench compares the batched plane to."""
+
+    def fn(key, state, s_vec, env_params):
+        action, _ = agent.select_fn(key, agent.cfg, state, s_vec, None,
+                                    env_params, explore)
+        return action
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def batched_select_program(agent: Agent, params_axes, explore: bool = False,
+                           donate: bool = False):
+    """Every active slot's select as ONE jitted vmapped call.
+
+    ``params_axes`` is the hashable per-leaf in_axes pytree from
+    :func:`params_in_axes` over the cluster stack (None = every cluster
+    identical → params broadcast whole).  The program gathers each slot's
+    cluster row from the stacked leaves with the ``[n_slots]`` lane index
+    (invariant leaves pass through single-copy), then vmaps the agent's
+    select over slots with shared agent state.  ``donate=True`` donates
+    the per-step key and state-vector buffers (rebuilt every step; the
+    agent state and cluster stack are long-lived and never donated)."""
+
+    def fn(keys, state, s_mat, lane_idx, stacked_params):
+        if params_axes is None:
+            lanes, in_axes = stacked_params, None
+        else:
+            flat, treedef = jax.tree_util.tree_flatten(stacked_params)
+            flat_axes = jax.tree_util.tree_flatten(
+                params_axes, is_leaf=lambda x: x is None)[0]
+            lanes = jax.tree_util.tree_unflatten(treedef, [
+                jnp.take(p, lane_idx, axis=0) if a == 0 else p
+                for p, a in zip(flat, flat_axes)])
+            in_axes = params_axes
+
+        def one(k, sv, lane_p):
+            action, _ = agent.select_fn(k, agent.cfg, state, sv, None,
+                                        lane_p, explore)
+            return action
+
+        return jax.vmap(one, in_axes=(0, 0, in_axes))(keys, s_mat, lanes)
+
+    if donate:
+        return jax.jit(fn, donate_argnums=(0, 2))
+    return jax.jit(fn)
+
+
+# --------------------------------------------------------------------------
+# The control plane
+# --------------------------------------------------------------------------
+class ControlPlane:
+    """Host-side slot scheduler around one batched decision program.
+
+    One plane serves ONE decision kind (an ``core.spaces`` action space)
+    with one agent + agent state shared across clusters; clusters differ
+    by their registered EnvParams.  ``donate=None`` donates per-step
+    buffers on accelerator backends only (donation is a no-op on CPU)."""
+
+    def __init__(self, env, agent: Agent, agent_state,
+                 kind: str = "placement", n_slots: int = 8,
+                 explore: bool = False, donate: bool | None = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.space = spaces.action_space(kind)     # unknown kind -> KeyError
+        self.kind = kind
+        self.env = env
+        self.agent = agent
+        self.state = agent_state
+        self.n_slots = int(n_slots)
+        self.explore = bool(explore)
+        self.donate = (jax.default_backend() != "cpu"
+                       if donate is None else bool(donate))
+        self.queue: deque[DecisionRequest] = deque()
+        self.slots: list[Optional[DecisionRequest]] = [None] * self.n_slots
+        self._ref = env.default_params()
+        self._clusters: dict[str, int] = {}
+        self._params_list: list[Any] = []
+        self._stacked = None
+        self._axes = None
+        self._finished: list[DecisionRequest] = []
+        self._latencies_ms: list[float] = []
+
+    # -- cluster registry ----------------------------------------------------
+    def register_cluster(self, name: str, env_params=None) -> int:
+        """Attach a live cluster (default: the env's declared params).
+        Returns its index.  Register clusters BEFORE steady-state serving:
+        growing the registry re-stacks the params and changes the batched
+        program's shapes, costing one recompile."""
+        if name in self._clusters:
+            raise ValueError(f"cluster {name!r} already registered")
+        self._clusters[name] = len(self._params_list)
+        self._params_list.append(
+            self.env.default_params() if env_params is None else env_params)
+        self._stacked = None                       # re-stack lazily
+        return self._clusters[name]
+
+    @property
+    def clusters(self) -> tuple[str, ...]:
+        return tuple(self._clusters)
+
+    def _ensure_stacked(self) -> None:
+        if self._stacked is not None:
+            return
+        if not self._params_list:
+            raise RuntimeError("no clusters registered — call "
+                               "register_cluster() before serving")
+        # setup work crosses host<->device (the invariant-leaf comparison
+        # pulls to host): lift the diagnostics transfer guard, as the
+        # fleet runner's prepare_fleet does
+        with jax.transfer_guard("allow"):
+            self._stacked = stack_env_params(self._params_list,
+                                             broadcast_invariant=True)
+            self._axes = params_in_axes(self._stacked, self._ref)
+
+    @property
+    def program(self):
+        """The plane's jitted batched-select program (stable identity per
+        (agent, cluster-stack layout, explore, donate) — hand this to
+        ``diagnostics.guards(track=...)``)."""
+        self._ensure_stacked()
+        return batched_select_program(self.agent, self._axes, self.explore,
+                                      self.donate)
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: DecisionRequest) -> None:
+        if req.cluster not in self._clusters:
+            raise KeyError(f"cluster {req.cluster!r} not registered; "
+                           f"known: {sorted(self._clusters)}")
+        if req.kind is None:
+            req.kind = self.kind
+        elif req.kind != self.kind:
+            raise ValueError(f"request kind {req.kind!r} routed to the "
+                             f"{self.kind!r} plane")
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def run(self, key, max_steps: int = 10_000) -> list[DecisionRequest]:
+        """Drain the queue; returns every request finished so far."""
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            key, k = jax.random.split(key)
+            self.step(k)
+            steps += 1
+        return self._finished
+
+    # -- one engine iteration ------------------------------------------------
+    def step(self, key) -> list[DecisionRequest]:
+        """Admit from the queue, serve every active slot in one batched
+        dispatch, retire + recycle all served slots.  Returns the requests
+        decided this step (in slot order: admission order)."""
+        self._admit()
+        active = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        self._ensure_stacked()
+        program = self.program
+        # batch assembly is boundary work (host buffers -> device): lift
+        # the transfer guard here; the dispatch below runs guarded
+        with jax.transfer_guard("allow"):
+            s_mat = np.zeros((self.n_slots, self.env.state_dim), np.float32)
+            lane_idx = np.zeros(self.n_slots, np.int32)
+            for i, req in active:
+                s_mat[i] = np.asarray(req.s_vec, np.float32)
+                lane_idx[i] = self._clusters[req.cluster]
+            keys = jax.random.split(key, self.n_slots)
+            s_dev = jnp.asarray(s_mat)
+            idx_dev = jnp.asarray(lane_idx)
+        out = program(keys, self.state, s_dev, idx_dev, self._stacked)
+        actions = np.asarray(out)                  # explicit pull (+sync)
+        now = time.perf_counter()
+        served = []
+        for i, req in active:
+            req.action = actions[i]
+            req.latency_ms = (now - req.submitted_at) * 1e3
+            req.done = True
+            self.slots[i] = None                   # recycle slot
+            self._latencies_ms.append(req.latency_ms)
+            self._finished.append(req)
+            served.append(req)
+        return served
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + self.active
+
+    def decision_stats(self) -> dict:
+        """p50/p99/mean decision latency over everything served so far."""
+        return latency_stats(self._latencies_ms)
+
+    def reset_stats(self) -> None:
+        """Forget finished requests + the latency trace (queue and slots
+        must be drained) — lets a bench warm the program up, then measure
+        a clean steady-state window."""
+        if self.pending:
+            raise RuntimeError("reset_stats with in-flight requests")
+        self._finished.clear()
+        self._latencies_ms.clear()
+
+
+class ControlService:
+    """One serving endpoint dispatching several decision kinds.
+
+    A thin router over per-kind :class:`ControlPlane`\\ s: requests carry
+    ``kind`` and land on the matching plane; one :meth:`step` advances
+    every plane (each runs its own batched program — decision kinds have
+    different action shapes, so they cannot share a dispatch)."""
+
+    def __init__(self, planes: dict[str, ControlPlane]):
+        for kind, plane in planes.items():
+            if plane.kind != kind:
+                raise ValueError(f"plane for {kind!r} serves {plane.kind!r}")
+        self.planes = dict(planes)
+
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        return tuple(sorted(self.planes))
+
+    def register_cluster(self, name: str, env_params=None) -> None:
+        """Register a cluster with EVERY plane (one live cluster asks for
+        all decision kinds)."""
+        for kind in self.kinds:
+            self.planes[kind].register_cluster(name, env_params)
+
+    def submit(self, req: DecisionRequest) -> None:
+        if req.kind is None:
+            raise ValueError("service requests must carry kind=")
+        if req.kind not in self.planes:
+            raise KeyError(f"no plane serves kind {req.kind!r}; "
+                           f"known: {list(self.kinds)}")
+        self.planes[req.kind].submit(req)
+
+    def step(self, key) -> list[DecisionRequest]:
+        served: list[DecisionRequest] = []
+        for kind in self.kinds:
+            key, k = jax.random.split(key)
+            served.extend(self.planes[kind].step(k))
+        return served
+
+    def run(self, key, max_steps: int = 10_000) -> list[DecisionRequest]:
+        steps = 0
+        while any(p.pending for p in self.planes.values()) \
+                and steps < max_steps:
+            key, k = jax.random.split(key)
+            self.step(k)
+            steps += 1
+        return [r for kind in self.kinds
+                for r in self.planes[kind]._finished]
+
+    def programs(self) -> tuple:
+        """Every plane's jitted program, for ``guards(track=...)``."""
+        return tuple(self.planes[k].program for k in self.kinds)
+
+    def decision_stats(self) -> dict[str, dict]:
+        return {k: self.planes[k].decision_stats() for k in self.kinds
+                if self.planes[k]._latencies_ms}

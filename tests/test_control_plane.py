@@ -1,0 +1,271 @@
+"""Serving control plane (repro/serve/control.py) + the action-space
+registry and decision policies behind it.
+
+Acceptance gates pinned here: batched plane decisions bit-match
+per-cluster single selects (explore=False) for a params-INSENSITIVE agent
+(ddpg placement) and a params-SENSITIVE one (auto_tune — wrong cluster
+gathering would flip its argmin); admission/eviction is strict FIFO under
+a full slot pool; the latency percentiles are deterministic nearest-rank;
+and steady-state serving over a fixed cluster registry compiles exactly
+once."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_agent, spaces
+from repro.dsdps import SchedulingEnv, apps, scenarios
+from repro.dsdps.actions import RATE_LEVELS, TUNE_GRID
+from repro.dsdps.apps import default_workload
+from repro.serve.control import (ControlPlane, ControlService,
+                                 DecisionRequest, latency_stats,
+                                 nearest_rank_percentile,
+                                 single_select_program)
+
+
+@pytest.fixture(scope="module")
+def env():
+    topo = apps.continuous_queries("small")
+    return SchedulingEnv(topo, default_workload(topo))
+
+
+def _load(env, names, n, seed=0):
+    """(rid, cluster, s_vec) synthetic request triples."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid in range(n):
+        X = np.eye(env.M, dtype=np.float32)[rng.integers(0, env.M, env.N)]
+        w = np.exp(rng.normal(0.0, 0.25, env.workload.num_spouts))
+        out.append((rid, names[rid % len(names)],
+                    np.concatenate([X.reshape(-1), w.astype(np.float32)])))
+    return out
+
+
+def _plane(env, kind, agent_name, n_clusters=3, n_slots=3, seed=0, **kw):
+    agent = make_agent(agent_name, env, **kw)
+    plane = ControlPlane(env, agent, agent.init(jax.random.PRNGKey(seed)),
+                         kind=kind, n_slots=n_slots, donate=False)
+    key = jax.random.PRNGKey(seed + 1)
+    for c in range(n_clusters):
+        key, k = jax.random.split(key)
+        plane.register_cluster(f"c{c}", scenarios.sample_perturbed(env, k))
+    return plane
+
+
+# --------------------------------------------------------------------------
+# Action-space registry
+# --------------------------------------------------------------------------
+def test_action_space_registry(env):
+    assert {"placement", "rate_control", "auto_tune"} \
+        <= set(spaces.action_space_names())
+    assert spaces.action_space("placement").shape_fn(env) == (env.N, env.M)
+    assert spaces.action_space("placement").default_agent == "ddpg"
+    assert spaces.action_space("rate_control").shape_fn(env) == \
+        (env.workload.num_spouts, len(RATE_LEVELS))
+    assert spaces.action_space("auto_tune").shape_fn(env) == (len(TUNE_GRID),)
+    with pytest.raises(KeyError):
+        spaces.action_space("no_such_space")
+
+
+def test_decision_policies_feasible_one_hot(env):
+    s_vec = env.state_vector(env.reset(jax.random.PRNGKey(0)))
+    for name in ("rate_control", "auto_tune"):
+        agent = make_agent(name, env)
+        state = agent.init(jax.random.PRNGKey(1))
+        action, _ = agent.select(jax.random.PRNGKey(2), state, s_vec, None,
+                                 env.default_params(), explore=False)
+        shape = spaces.action_space(name).shape_fn(env)
+        assert action.shape == shape
+        assert bool(spaces.action_space(name).feasible_fn(action))
+
+
+# --------------------------------------------------------------------------
+# Nearest-rank percentile math (fixed trace)
+# --------------------------------------------------------------------------
+def test_nearest_rank_percentile_fixed_trace():
+    trace = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert nearest_rank_percentile(trace, 50.0) == 3.0
+    assert nearest_rank_percentile(trace, 1.0) == 1.0
+    assert nearest_rank_percentile(trace, 99.0) == 5.0
+    assert nearest_rank_percentile(trace, 100.0) == 5.0
+    # 10 samples: nearest rank = ceil(q/100 * n), no interpolation
+    t10 = list(range(1, 11))
+    assert nearest_rank_percentile(t10, 50.0) == 5
+    assert nearest_rank_percentile(t10, 90.0) == 9
+    assert nearest_rank_percentile(t10, 91.0) == 10
+    with pytest.raises(ValueError):
+        nearest_rank_percentile([], 50.0)
+
+
+def test_latency_stats_schema():
+    s = latency_stats([2.0, 1.0, 3.0])
+    assert s["n"] == 3
+    assert s["p50_ms"] == 2.0 and s["p99_ms"] == 3.0
+    assert s["mean_ms"] == pytest.approx(2.0)
+
+
+# --------------------------------------------------------------------------
+# FIFO admission / eviction under a full slot pool
+# --------------------------------------------------------------------------
+def test_fifo_admission_under_full_slot_pool(env):
+    plane = _plane(env, "rate_control", "rate_control", n_slots=2)
+    load = _load(env, plane.clusters, 7)
+    for rid, c, s in load:
+        plane.submit(DecisionRequest(rid=rid, cluster=c, s_vec=s))
+    assert plane.pending == 7
+
+    key = jax.random.PRNGKey(3)
+    batches = []
+    while plane.pending:
+        key, k = jax.random.split(key)
+        batches.append([r.rid for r in plane.step(k)])
+        # decisions are one-step: every served slot retires immediately
+        assert plane.active == 0
+    # strict FIFO admission, batch width = min(n_slots, backlog)
+    assert batches == [[0, 1], [2, 3], [4, 5], [6]]
+    assert [r.rid for r in plane._finished] == list(range(7))
+    assert all(r.done and r.latency_ms > 0.0 for r in plane._finished)
+    # queueing delay is billed: later requests waited through more steps
+    lats = [r.latency_ms for r in plane._finished]
+    assert lats[6] > lats[0]
+    assert plane.decision_stats()["n"] == 7
+
+
+def test_reset_stats_guards_in_flight(env):
+    plane = _plane(env, "rate_control", "rate_control", n_slots=2)
+    rid, c, s = _load(env, plane.clusters, 1)[0]
+    plane.submit(DecisionRequest(rid=rid, cluster=c, s_vec=s))
+    with pytest.raises(RuntimeError):
+        plane.reset_stats()
+    plane.run(jax.random.PRNGKey(0))
+    plane.reset_stats()
+    assert not plane._finished
+    with pytest.raises(ValueError):
+        plane.decision_stats()                   # empty trace again
+
+
+# --------------------------------------------------------------------------
+# Batched decisions bit-match per-cluster single selects
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("kind,agent_name,kw", [
+    ("placement", "ddpg", {"k_nn": 4}),
+    ("auto_tune", "auto_tune", {}),   # params-sensitive: gathers matter
+])
+def test_batched_bitmatches_single_selects(env, kind, agent_name, kw):
+    agent = make_agent(agent_name, env, **kw)
+    state = agent.init(jax.random.PRNGKey(4))
+    plane = ControlPlane(env, agent, state, kind=kind, n_slots=3,
+                         donate=False)
+    key = jax.random.PRNGKey(5)
+    raw_params = {}
+    for c in range(3):
+        key, k = jax.random.split(key)
+        raw_params[f"c{c}"] = scenarios.sample_perturbed(env, k)
+        plane.register_cluster(f"c{c}", raw_params[f"c{c}"])
+    load = _load(env, plane.clusters, 7)
+    for rid, c, s in load:
+        plane.submit(DecisionRequest(rid=rid, cluster=c, s_vec=s))
+    done = {r.rid: r for r in plane.run(jax.random.PRNGKey(6))}
+    assert len(done) == 7
+
+    # explore=False decisions are key-independent: each batched action
+    # must equal the single select on that cluster's RAW (unstacked)
+    # params, bit for bit
+    prog = single_select_program(agent, False)
+    for rid, c, s in load:
+        single = np.asarray(prog(jax.random.PRNGKey(7), state, s,
+                                 raw_params[c]))
+        np.testing.assert_array_equal(np.asarray(done[rid].action), single)
+        assert bool(plane.space.feasible_fn(done[rid].action))
+
+
+# --------------------------------------------------------------------------
+# Steady-state compile discipline
+# --------------------------------------------------------------------------
+def test_steady_state_compiles_exactly_once(env):
+    from repro.diagnostics import guards
+    from repro.serve.control import batched_select_program
+
+    # the program builder is lru_cached module-wide: earlier tests may
+    # have compiled this (agent, axes) pair already — start truly cold
+    batched_select_program.cache_clear()
+    plane = _plane(env, "rate_control", "rate_control", n_slots=2)
+    load = _load(env, plane.clusters, 9)
+    k_cold, k_steady = jax.random.split(jax.random.PRNGKey(8))
+
+    # cold: the FIRST dispatch compiles the batched program — exactly once
+    with guards(track=(plane.program,), label="serve_cold") as g:
+        for rid, c, s in load[:5]:
+            plane.submit(DecisionRequest(rid=rid, cluster=c, s_vec=s))
+        plane.run(k_cold)
+    g.counter.assert_compiles(1)
+
+    # steady state: a new request mix over the SAME cluster registry
+    # (partial final batch included) reuses the executable
+    with guards(track=(plane.program,), label="serve_steady") as g2:
+        for rid, c, s in load[5:]:
+            plane.submit(DecisionRequest(rid=100 + rid, cluster=c, s_vec=s))
+        plane.run(k_steady)
+    g2.counter.assert_compiles(0)
+    assert len(plane._finished) == 9
+
+
+# --------------------------------------------------------------------------
+# Multi-kind service routing + error cases
+# --------------------------------------------------------------------------
+def test_service_routes_kinds_to_planes(env):
+    kinds = ("placement", "rate_control", "auto_tune")
+    planes = {}
+    for kind in kinds:
+        space = spaces.action_space(kind)
+        kw = {"k_nn": 4} if space.default_agent == "ddpg" else {}
+        agent = make_agent(space.default_agent, env, **kw)
+        planes[kind] = ControlPlane(env, agent,
+                                    agent.init(jax.random.PRNGKey(10)),
+                                    kind=kind, n_slots=2, donate=False)
+    svc = ControlService(planes)
+    assert svc.kinds == tuple(sorted(kinds))
+    svc.register_cluster("c0", env.default_params())
+    svc.register_cluster("c1")
+    load = _load(env, ("c0", "c1"), 6)
+    for rid, c, s in load:
+        svc.submit(DecisionRequest(rid=rid, cluster=c, s_vec=s,
+                                   kind=kinds[rid % 3]))
+    done = svc.run(jax.random.PRNGKey(11))
+    assert len(done) == 6
+    for r in done:
+        shape = spaces.action_space(r.kind).shape_fn(env)
+        assert np.asarray(r.action).shape == shape
+    stats = svc.decision_stats()
+    assert set(stats) == set(kinds)
+    assert all(st["n"] == 2 for st in stats.values())
+
+
+def test_error_cases(env):
+    agent = make_agent("rate_control", env)
+    state = agent.init(jax.random.PRNGKey(12))
+    with pytest.raises(KeyError):
+        ControlPlane(env, agent, state, kind="no_such_space")
+    with pytest.raises(ValueError):
+        ControlPlane(env, agent, state, kind="rate_control", n_slots=0)
+
+    plane = ControlPlane(env, agent, state, kind="rate_control", n_slots=2)
+    with pytest.raises(RuntimeError):        # no clusters registered
+        plane.program
+    plane.register_cluster("c0")
+    with pytest.raises(ValueError):          # duplicate
+        plane.register_cluster("c0")
+    s = np.zeros(env.state_dim, np.float32)
+    with pytest.raises(KeyError):            # unregistered cluster
+        plane.submit(DecisionRequest(rid=0, cluster="ghost", s_vec=s))
+    with pytest.raises(ValueError):          # kind mismatch
+        plane.submit(DecisionRequest(rid=0, cluster="c0", s_vec=s,
+                                     kind="placement"))
+
+    with pytest.raises(ValueError):          # plane under the wrong key
+        ControlService({"placement": plane})
+    svc = ControlService({"rate_control": plane})
+    with pytest.raises(ValueError):          # service needs kind=
+        svc.submit(DecisionRequest(rid=0, cluster="c0", s_vec=s))
+    with pytest.raises(KeyError):            # no plane for that kind
+        svc.submit(DecisionRequest(rid=0, cluster="c0", s_vec=s,
+                                   kind="auto_tune"))

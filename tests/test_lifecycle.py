@@ -284,3 +284,78 @@ def test_elastic_checkpoint_lane_map_and_resume(tmp_path, small_env,
 
     with pytest.raises(TypeError):
         resume_after_failure(ck, env, object(), keys, states)
+
+
+def test_kill_and_resume_elastic_bitmatches_uninterrupted(tmp_path,
+                                                          small_env):
+    """The kill/resume contract for COMPACTED fleets: kill an elastic
+    scenario run after a compaction (lane 1 stopped at epoch 4, snapshot
+    taken at epoch 8 holds 2 lanes + lane map), resume it through
+    restore_elastic + run_online_fleet_elastic(lane_ids=...), and the
+    surviving lanes' remaining trajectories and final agent states must
+    bit-match the uninterrupted run — with all accounting still in the
+    ORIGINAL lane numbering."""
+    from repro.checkpoint.fleet import FleetCheckpoint
+    from repro.core.agent import reset_fleet_states
+    from repro.fleet.lifecycle import restore_elastic
+
+    env = small_env
+    agent = make_agent("ddpg", env, k_nn=4)
+    F, T, cut = 3, 12, 8
+    params = scenarios.build("one_slow_machine", env, F,
+                             broadcast_invariant=True)
+    ref = env.default_params()
+    states = agent.init_fleet(jax.random.PRNGKey(8), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(9), F)
+
+    def stop_lane1(rewards_so_far, t):
+        done = np.zeros(rewards_so_far.shape[0], bool)
+        if t == 4:
+            done[1] = True
+        return done
+
+    ck = FleetCheckpoint(tmp_path, every=4, keep=10, use_async=False)
+    full = run_online_fleet_elastic(keys, env, agent, states, T,
+                                    rule=StopRule(check_every=4),
+                                    env_params=params, stop_fn=stop_lane1,
+                                    checkpoint=ck)
+    assert full.epochs_run.tolist() == [T, 4, T]
+    assert full.lane_ids.tolist() == [0, 1, 2]
+    assert ck.has_lane_map(epoch=cut)
+
+    # "kill" = resume from the epoch-8 snapshot with FULL-SIZE templates
+    # (they only supply tree structure; shapes come from the manifest)
+    like_env = reset_fleet_states(keys, env)
+    epoch, r_keys, r_states, r_env, r_params, ids = restore_elastic(
+        ck, states, like_env, keys, env_params=params, ref=ref, epoch=cut)
+    assert epoch == cut
+    assert ids.tolist() == [0, 2]            # lane 1 compacted away
+    # scenario rows followed the survivors; invariant leaves stay single
+    assert np.asarray(r_params.speed).shape[0] == 2
+    np.testing.assert_array_equal(np.asarray(r_params.speed),
+                                  np.asarray(params.speed)[[0, 2]])
+    assert r_params.routing.shape == ref.routing.shape
+
+    ck2 = FleetCheckpoint(tmp_path / "resumed", every=4, keep=10,
+                          use_async=False)
+    res = run_online_fleet_elastic(r_keys, env, agent, r_states, T - cut,
+                                   rule=StopRule(check_every=4),
+                                   env_states=r_env, env_params=r_params,
+                                   start_epoch=epoch, lane_ids=ids,
+                                   stop_fn=stop_lane1, checkpoint=ck2)
+    assert res.lane_ids.tolist() == [0, 2]
+    assert res.epochs_run.tolist() == [T - cut, T - cut]
+    # remaining trajectories bit-match the uninterrupted run's tail
+    np.testing.assert_array_equal(res.history.rewards,
+                                  full.history.rewards[[0, 2], cut:])
+    np.testing.assert_array_equal(res.history.moved,
+                                  full.history.moved[[0, 2], cut:])
+    # final agent states bit-match too
+    for a, b in zip(jax.tree.leaves(res.states), jax.tree.leaves(full.states)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[[0, 2]])
+    # the resumed run's snapshots keep naming the ORIGINAL lanes
+    two = jax.tree.map(lambda x: x[:2], states)
+    ep2, _, _, _, lanes2 = ck2.restore(two, reset_fleet_states(keys[:2], env),
+                                       keys[:2], with_lane_map=True)
+    assert ep2 == T and lanes2.tolist() == [0, 2]

@@ -36,6 +36,7 @@ _EXTERNAL = ("http://", "https://", "mailto:")
 EXECUTABLE_DOCS = (
     "README.md",
     "docs/elastic_fleets.md",
+    "docs/serving.md",
 )
 
 
