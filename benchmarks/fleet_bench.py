@@ -28,8 +28,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
+import subprocess
+import sys
 import time
+
+if "--multihost-worker" in sys.argv:
+    # workers of a `--multihost` run must join jax.distributed before ANY
+    # jax computation — and some agent modules build jnp defaults at
+    # import time — so the handshake happens ahead of the imports below
+    from repro.launch.mesh import init_distributed
+    init_distributed()
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +60,22 @@ DEFAULT_JSON = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / \
 def _params_bytes(params) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(params))
+
+
+def provenance(mesh_shape=None) -> dict:
+    """Where this row was measured: pinned on every JSON row so numbers
+    from different machines / backends / process topologies never get
+    compared as like-for-like by accident."""
+    out = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "process_count": jax.process_count(),
+        "device_count": jax.device_count(),
+        "local_device_count": jax.local_device_count(),
+    }
+    if mesh_shape is not None:
+        out["mesh_shape"] = [int(s) for s in mesh_shape]
+    return out
 
 
 def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
@@ -96,6 +122,19 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
                  f"lane_epochs_per_sec={eps_warm:.1f};"
                  f"speedup_vs_python={eps_warm / eps_python:.1f}x;"
                  f"speedup_incl_compile={eps_cold / eps_python:.1f}x"))
+
+    # per-lane memory: what one more lane costs — the replay buffer
+    # dominates the carry, and this is the number that sizes 1000+-lane
+    # sweeps against a device's HBM (ROADMAP: multi-host mega-fleets)
+    carry_bytes = _params_bytes(states)
+    replay_bytes = (_params_bytes(states.replay)
+                    if hasattr(states, "replay") else 0)
+    rows.append((f"fleet_bench_{app}_lane_memory_f{fleet}", 0.0,
+                 f"carry_bytes_per_lane={carry_bytes // fleet};"
+                 f"replay_bytes_per_lane={replay_bytes // fleet};"
+                 f"net_bytes_per_lane={(carry_bytes - replay_bytes) // fleet};"
+                 f"replay_fraction={replay_bytes / max(carry_bytes, 1):.3f};"
+                 f"fleet_carry_bytes={carry_bytes}"))
 
     if guards_overhead:
         # the SAME seed-only fleet run, re-timed inside the runtime
@@ -256,6 +295,108 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
     return rows
 
 
+# --------------------------------------------------------------------------
+# multi-host scaling: N localhost processes, one process-spanning mesh
+# --------------------------------------------------------------------------
+def run_multihost_worker(fleet: int, epochs: int, app: str,
+                         worker_out: str | None) -> None:
+    """One rank of a ``--multihost`` measurement: every process builds the
+    SAME fleet from shared seeds, joins the process-spanning mesh, and
+    times the spanning ``run_online_fleet`` between cross-process
+    barriers; process 0 writes the result JSON for the driver."""
+    from jax.experimental import multihost_utils
+
+    from repro.launch.mesh import make_fleet_mesh
+    topo = apps.ALL_APPS[app]()
+    env = SchedulingEnv(topo, default_workload(topo))
+    cfg = DDPGConfig(n_executors=env.N, n_machines=env.M,
+                     state_dim=env.state_dim)
+    agent = make_agent("ddpg", env, cfg=cfg)
+    states = ddpg_lib.init_fleet(jax.random.PRNGKey(2), cfg, fleet)
+    keys = jax.random.split(jax.random.PRNGKey(3), fleet)
+    mesh = make_fleet_mesh(spanning=True)
+    run_online_fleet(keys, env, agent, states, T=epochs, mesh=mesh)  # compile
+    multihost_utils.sync_global_devices("fleet_bench_mh_warm")
+    t0 = time.perf_counter()
+    run_online_fleet(keys, env, agent, states, T=epochs, mesh=mesh)
+    multihost_utils.sync_global_devices("fleet_bench_mh_done")
+    dt = time.perf_counter() - t0
+    if jax.process_index() == 0 and worker_out:
+        pathlib.Path(worker_out).write_text(json.dumps({
+            "lane_epochs_per_sec": fleet * epochs / dt,
+            "wall_s": dt,
+            "fleet": fleet, "epochs": epochs,
+            "provenance": provenance(mesh.devices.shape),
+        }))
+
+
+def run_multihost(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
+                  smoke: bool = False, devices_per_proc: int = 2,
+                  json_path: str = "") -> list[tuple]:
+    """Drive the multi-host scaling sweep: for each process count spawn
+    that many localhost workers (``repro.launch.multihost`` env wiring:
+    REPRO_* vars + ``--xla_force_host_platform_device_count``), each
+    running :func:`run_multihost_worker`, and record lane-epochs/sec
+    plus the scaling factor against the single-process run.  On one
+    machine the processes share the same cores, so the interesting
+    number is the multi-process machinery's overhead staying small —
+    on real multi-host fleets the same rows become capacity scaling."""
+    from repro.launch.multihost import free_port, worker_env
+    procs_list = (1, 2) if smoke else (1, 2, 4)
+    max_dev = procs_list[-1] * devices_per_proc
+    if fleet % max_dev != 0:
+        raise SystemExit(
+            f"--multihost needs --fleet divisible by "
+            f"{max_dev} (= {procs_list[-1]} procs x {devices_per_proc} "
+            f"devices); got {fleet}")
+    rows, base_eps = [], None
+    out_dir = pathlib.Path(json_path).parent if json_path \
+        else pathlib.Path(".")
+    for n in procs_list:
+        coordinator = f"127.0.0.1:{free_port()}"
+        out = out_dir / f".fleet_bench_mh_{n}.json"
+        if out.exists():
+            out.unlink()
+        workers = []
+        for pid in range(n):
+            cmd = [sys.executable, "-m", "benchmarks.fleet_bench",
+                   "--multihost-worker", "--fleet", str(fleet),
+                   "--epochs", str(epochs), "--app", app, "--json", ""]
+            if pid == 0:
+                cmd += ["--worker-out", str(out)]
+            workers.append(subprocess.Popen(
+                cmd, env=worker_env(os.environ, coordinator, n, pid,
+                                    devices_per_proc),
+                stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                text=True))
+        fail = []
+        for pid, p in enumerate(workers):
+            out_text, _ = p.communicate(timeout=1800)
+            if p.returncode != 0:
+                fail.append((pid, out_text))
+        if fail:
+            for pid, text in fail:
+                print(f"----- multihost worker {pid}/{n} failed -----")
+                print("\n".join(text.splitlines()[-30:]))
+            raise SystemExit(f"--multihost: {len(fail)} worker(s) of the "
+                             f"{n}-process run failed")
+        payload = json.loads(out.read_text())
+        out.unlink()
+        eps = payload["lane_epochs_per_sec"]
+        if base_eps is None:
+            base_eps = eps
+        rows.append((
+            f"fleet_bench_{app}_multihost_p{n}_d{devices_per_proc}"
+            f"_f{fleet}_T{epochs}",
+            payload["wall_s"] / (fleet * epochs) * 1e6,
+            f"lane_epochs_per_sec={eps:.1f};"
+            f"scaling_vs_1proc={eps / base_eps:.2f}x;"
+            f"processes={n};devices={n * devices_per_proc};"
+            f"wall_s={payload['wall_s']:.3f}",
+            payload["provenance"]))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fleet", type=int, default=32)
@@ -286,21 +427,49 @@ def main() -> None:
                          "runtime tracing-discipline guards "
                          "(repro.diagnostics.guards) and record the "
                          "steady-state overhead vs the unguarded warm run")
+    ap.add_argument("--multihost", action="store_true",
+                    help="also run the multi-host scaling sweep: launch "
+                         "1/2/4 localhost worker processes joined into one "
+                         "jax.distributed job over a process-spanning "
+                         "fleet mesh (CPU device emulation) and record "
+                         "lane-epochs/sec + scaling per process count")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the --multihost sweep to 1/2 processes "
+                         "(the CI multihost-smoke job)")
+    ap.add_argument("--multihost-devices", type=int, default=2,
+                    help="emulated CPU devices per worker process in the "
+                         "--multihost sweep")
+    ap.add_argument("--multihost-worker", action="store_true",
+                    help=argparse.SUPPRESS)       # internal: one mh rank
+    ap.add_argument("--worker-out", default=None,
+                    help=argparse.SUPPRESS)       # internal: rank-0 result
     ap.add_argument("--json", default=str(DEFAULT_JSON),
                     help="benchmark JSON artifact path ('' disables)")
     args = ap.parse_args()
+    if args.multihost_worker:
+        run_multihost_worker(args.fleet, args.epochs, args.app,
+                             args.worker_out)
+        return
     rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
                    args.scenario_batched, args.broadcast_invariant,
                    args.sharded, args.lifecycle, args.guards)
+    if args.multihost:
+        rows += run_multihost(args.fleet, args.epochs, args.app,
+                              smoke=args.smoke,
+                              devices_per_proc=args.multihost_devices,
+                              json_path=args.json)
     print("name,us_per_call,derived")
-    for name, us, derived in rows:
+    for row in rows:
+        name, us, derived = row[:3]
         print(f"{name},{us:.1f},{derived}", flush=True)
     if args.json:
         out = pathlib.Path(args.json)
         out.parent.mkdir(parents=True, exist_ok=True)
+        prov = provenance()
         out.write_text(json.dumps(
-            [{"name": n, "us_per_call": round(us, 2), "derived": d}
-             for n, us, d in rows], indent=2))
+            [{"name": r[0], "us_per_call": round(r[1], 2), "derived": r[2],
+              "provenance": (r[3] if len(r) > 3 else prov)}
+             for r in rows], indent=2))
         print(f"wrote {out}")
 
 

@@ -124,7 +124,11 @@ class Checkpointer:
                 import ml_dtypes
                 arr = arr.view(ml_dtypes.bfloat16)
             if shard_leaves is not None:
-                arr = jax.device_put(arr, shard_leaves[i])
+                # put_global handles process-spanning shardings (each
+                # process feeds its addressable slice); it degenerates to
+                # device_put on ordinary meshes
+                from repro.sharding.fleet import put_global
+                arr = put_global(arr, shard_leaves[i])
             out.append(arr)
         return jax.tree.unflatten(treedef, out)
 

@@ -27,15 +27,66 @@ fleet shardings (``sharding.fleet.fleet_shardings``), so a run
 checkpointed on an 8-device mesh resumes on 4 devices (or on the host
 mesh) from the same file set.  The resume walkthrough lives in
 docs/sharded_fleets.md; the bit-exactness contract is pinned by
-tests/test_fleet_checkpoint.py."""
+tests/test_fleet_checkpoint.py.
+
+MULTI-HOST runs (``jax.distributed`` + a process-spanning mesh,
+``launch.mesh.init_distributed``) switch to a per-process shard layout:
+every process writes ONLY the fleet rows its devices own into its own
+``step_N/proc_P/`` directory (atomic tmp-rename per process, manifest
+with global row offsets per shard), replicated / host leaves are written
+once by process 0, and the step is published by process 0 writing
+``meta.json`` after a cross-process barrier — an incomplete step (a
+process died mid-save) is never visible to ``latest_epoch``.  Restore is
+elastic across HOST-count changes: the reader re-assembles full arrays
+from however many ``proc_*`` shard dirs the save had, then re-places
+them against the CURRENT mesh — so a fleet checkpointed by 2 processes
+resumes on 1 (and a single-process checkpoint resumes on a spanning
+mesh).  Multi-host saves are synchronous (the cross-process barrier is
+the cadence governor); the async overlap machinery stays single-process."""
 from __future__ import annotations
 
 import json
 import pathlib
+import shutil
+import zlib
 
+import jax
 import numpy as np
 
-from repro.checkpoint.checkpointer import AsyncCheckpointer, Checkpointer
+from repro.checkpoint.checkpointer import (AsyncCheckpointer, Checkpointer,
+                                           _leaf_paths)
+
+
+def _write_leaf(directory: pathlib.Path, index: int, name: str,
+                arr: np.ndarray, rows: list[int] | None = None,
+                global_shape: list[int] | None = None) -> dict:
+    """Write one (shard of a) leaf with the Checkpointer's conventions
+    (npy file, crc32, bfloat16 stored as raw uint16 bits); returns its
+    manifest entry.  ``rows=[start, stop)`` tags a fleet-axis shard with
+    the global rows it covers; ``rows=None`` is a whole leaf."""
+    fn = f"leaf_{index:05d}.npy"
+    logical_dtype = str(arr.dtype)
+    to_write = arr.view(np.uint16) if logical_dtype == "bfloat16" else arr
+    np.save(directory / fn, to_write, allow_pickle=False)
+    entry = {"name": name, "file": fn, "shape": list(arr.shape),
+             "dtype": logical_dtype,
+             "crc32": zlib.crc32(np.ascontiguousarray(to_write).tobytes())}
+    if rows is not None:
+        entry["rows"] = [int(rows[0]), int(rows[1])]
+        entry["global_shape"] = list(global_shape)
+    return entry
+
+
+def _read_leaf(directory: pathlib.Path, ent: dict) -> np.ndarray:
+    arr = np.load(directory / ent["file"], allow_pickle=False)
+    crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+    if crc != ent["crc32"]:
+        raise IOError(f"checkpoint corruption in {ent['name']}: "
+                      f"crc {crc} != {ent['crc32']}")
+    if ent["dtype"] == "bfloat16":
+        import ml_dtypes
+        arr = arr.view(ml_dtypes.bfloat16)
+    return arr
 
 
 class FleetCheckpoint:
@@ -77,12 +128,79 @@ class FleetCheckpoint:
         the device→host transfer nor the filesystem; the write publishes
         atomically).  ``lane_map`` — optional ``[fleet]`` int array naming
         the ORIGINAL lane each row is (elastic-lifecycle runs compact
-        their fleet between snapshots; plain fleet runs omit it)."""
+        their fleet between snapshots; plain fleet runs omit it).
+
+        In a multi-process job every process must call this with the
+        same ``epoch`` (the chunk schedule is deterministic, so they do):
+        the save switches to the per-process shard layout — each process
+        writes its addressable fleet rows, process 0 publishes the step
+        after a barrier."""
         bundle = self._bundle(agent_states, env_states, keys, lane_map)
-        if isinstance(self._ck, AsyncCheckpointer):
+        if jax.process_count() > 1:
+            self._save_multihost(epoch, bundle)
+        elif isinstance(self._ck, AsyncCheckpointer):
             self._ck.save_async(epoch, bundle)
         else:
             self._ck.save(epoch, bundle)
+
+    def _save_multihost(self, epoch: int, bundle: dict) -> None:
+        """Per-process shard save (synchronous, collective).
+
+        Layout: ``step_N/proc_P/`` holds process P's manifest + leaf
+        files.  A leaf sharded over the spanning fleet mesh contributes
+        one file PER ADDRESSABLE SHARD, tagged with the global row range
+        it covers (``rows``); replicated / host leaves are written once,
+        by process 0.  Each process stages its directory as ``.tmp`` and
+        renames atomically; the step only becomes restorable when
+        process 0 writes ``meta.json`` after the cross-process barrier —
+        so a process dying mid-save can never publish a half-step."""
+        from jax.experimental import multihost_utils
+        from repro.sharding.fleet import fleet_host
+        pid, nprocs = jax.process_index(), jax.process_count()
+        step_dir = self._ck.dir / f"step_{epoch:08d}"
+        step_dir.mkdir(parents=True, exist_ok=True)
+        tmp = self._ck.dir / f".tmp_step_{epoch:08d}_proc{pid:05d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        leaves = jax.tree.leaves(bundle)
+        names = _leaf_paths(bundle)
+        entries, n_files = [], 0
+        for name, leaf in zip(names, leaves):
+            sharded = (isinstance(leaf, jax.Array)
+                       and not leaf.is_fully_addressable
+                       and not leaf.sharding.is_fully_replicated)
+            if sharded:
+                for s in leaf.addressable_shards:
+                    start = s.index[0].start or 0
+                    arr = np.asarray(s.data)
+                    entries.append(_write_leaf(
+                        tmp, n_files, name, arr,
+                        rows=[int(start), int(start) + int(arr.shape[0])],
+                        global_shape=list(leaf.shape)))
+                    n_files += 1
+            elif pid == 0:     # replicated / host leaves: one copy, proc 0
+                entries.append(_write_leaf(tmp, n_files, name,
+                                           np.asarray(fleet_host(leaf))))
+                n_files += 1
+        (tmp / "manifest.json").write_text(json.dumps(
+            {"epoch": int(epoch), "process": pid, "leaves": entries}))
+        proc_dir = step_dir / f"proc_{pid:05d}"
+        if proc_dir.exists():
+            shutil.rmtree(proc_dir)
+        tmp.rename(proc_dir)                             # atomic per process
+        multihost_utils.sync_global_devices(f"fleet_ckpt_{epoch}")
+        if pid == 0:
+            (step_dir / "meta.json").write_text(json.dumps(
+                {"epoch": int(epoch), "process_count": nprocs,
+                 "layout": "multihost-v1"}))
+            self._gc_multihost()
+
+    def _gc_multihost(self) -> None:
+        steps = self.all_epochs()
+        for s in steps[: max(len(steps) - self._ck.keep, 0)]:
+            shutil.rmtree(self._ck.dir / f"step_{s:08d}", ignore_errors=True)
 
     def wait(self) -> None:
         """Block until queued async writes are on disk (raises the first
@@ -96,11 +214,28 @@ class FleetCheckpoint:
 
     # -- restore -------------------------------------------------------------
     def all_epochs(self) -> list[int]:
-        return self._ck.all_steps()
+        """Restorable epochs: single-process steps (``manifest.json``)
+        plus COMPLETE multi-host steps (``meta.json`` — written by
+        process 0 only after every process's shard dir hit disk)."""
+        steps = []
+        for p in self._ck.dir.glob("step_*"):
+            if (p / "manifest.json").exists() or (p / "meta.json").exists():
+                steps.append(int(p.name.split("_")[1]))
+        return sorted(steps)
 
     def latest_epoch(self) -> int | None:
         """Newest restorable epoch, or None when the directory is empty."""
-        return self._ck.latest_step()
+        steps = self.all_epochs()
+        return steps[-1] if steps else None
+
+    def _manifests(self, epoch: int) -> list[dict]:
+        """Every manifest of the step: one for the single-process layout,
+        one per ``proc_*`` shard dir for the multi-host layout."""
+        d = self._ck.dir / f"step_{epoch:08d}"
+        if (d / "manifest.json").exists():
+            return [json.loads((d / "manifest.json").read_text())]
+        return [json.loads((p / "manifest.json").read_text())
+                for p in sorted(d.glob("proc_*"))]
 
     def has_lane_map(self, epoch: int | None = None) -> bool:
         """True when the snapshot at ``epoch`` (default: latest) was
@@ -111,9 +246,18 @@ class FleetCheckpoint:
         epoch = self.latest_epoch() if epoch is None else epoch
         if epoch is None:
             return False
-        manifest = json.loads(
-            (self._ck.dir / f"step_{epoch:08d}" / "manifest.json").read_text())
-        return any("lanes" in ent["name"] for ent in manifest["leaves"])
+        return any("lanes" in ent["name"]
+                   for m in self._manifests(epoch) for ent in m["leaves"])
+
+    def is_multihost(self, epoch: int | None = None) -> bool:
+        """True when the snapshot at ``epoch`` (default: latest) was
+        written in the per-process shard layout (``meta.json`` +
+        ``proc_*`` dirs)."""
+        self.wait()
+        epoch = self.latest_epoch() if epoch is None else epoch
+        if epoch is None:
+            return False
+        return (self._ck.dir / f"step_{epoch:08d}" / "meta.json").exists()
 
     def restore(self, agent_states, env_states, keys, epoch: int | None = None,
                 mesh=None, with_lane_map: bool = False):
@@ -144,8 +288,63 @@ class FleetCheckpoint:
         if mesh is not None:
             from repro.sharding.fleet import fleet_shardings
             shardings = fleet_shardings(mesh, like)
-        out = self._ck.restore(like, step=epoch, shardings=shardings)
+        if self.is_multihost(epoch):
+            out = self._restore_multihost(like, epoch, shardings)
+        else:
+            out = self._ck.restore(like, step=epoch, shardings=shardings)
         if with_lane_map:
             return (epoch, out["agent"], out["env"], out["keys"],
                     np.asarray(out["lanes"]))
         return epoch, out["agent"], out["env"], out["keys"]
+
+    def _restore_multihost(self, like, epoch: int, shardings=None):
+        """Re-assemble a per-process shard save into full arrays and
+        (optionally) re-place them against the current mesh.
+
+        Elastic across HOST-count changes by construction: the reader
+        concatenates whatever ``proc_*`` shard dirs the save produced —
+        2-process shards restore on 1 process, a single-process save
+        restores onto a spanning mesh (``sharding.fleet.put_global``
+        feeds each process its addressable slice), and any fleet/device
+        mismatch falls back to replication exactly as the single-process
+        elastic restore does."""
+        d = self._ck.dir / f"step_{epoch:08d}"
+        full: dict[str, np.ndarray] = {}
+        covered: dict[str, int] = {}
+        for proc_dir in sorted(d.glob("proc_*")):
+            manifest = json.loads((proc_dir / "manifest.json").read_text())
+            for ent in manifest["leaves"]:
+                arr = _read_leaf(proc_dir, ent)
+                name = ent["name"]
+                if ent.get("rows") is None:
+                    full[name] = arr
+                    covered[name] = -1            # whole leaf present
+                else:
+                    start, stop = ent["rows"]
+                    buf = full.get(name)
+                    if buf is None:
+                        buf = np.zeros(tuple(ent["global_shape"]), arr.dtype)
+                        full[name] = buf
+                        covered[name] = 0
+                    buf[start:stop] = arr
+                    if covered[name] >= 0:
+                        covered[name] += stop - start
+        for name, got in covered.items():
+            if got >= 0 and got < full[name].shape[0]:
+                raise IOError(
+                    f"multi-host checkpoint step {epoch} is missing fleet "
+                    f"rows of {name}: {got}/{full[name].shape[0]} covered "
+                    f"(incomplete shard set in {d})")
+        names = _leaf_paths(like)
+        missing = [n for n in names if n not in full]
+        if missing:
+            raise IOError(f"multi-host checkpoint step {epoch} lacks "
+                          f"leaves {missing} (template/layout mismatch)")
+        leaves = [full[n] for n in names]
+        if shardings is not None:
+            from repro.sharding.fleet import put_global
+            shard_leaves = jax.tree.leaves(shardings)
+            leaves = [put_global(a, s)
+                      for a, s in zip(leaves, shard_leaves)]
+        _, treedef = jax.tree.flatten(like)
+        return jax.tree.unflatten(treedef, leaves)

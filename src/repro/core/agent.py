@@ -67,7 +67,7 @@ from repro.core.api import Agent, make_epoch_step
 from repro.diagnostics import maybe_check_finite
 from repro.core.ddpg import DDPGConfig, DDPGState
 from repro.core.dqn import DQNConfig, DQNState
-from repro.sharding.fleet import fleet_spec, shard_fleet
+from repro.sharding.fleet import fleet_host, fleet_spec, shard_fleet
 
 
 @dataclasses.dataclass
@@ -464,9 +464,13 @@ def run_online_fleet(
             keys, states, env_states, env_params, env=env, agent=agent,
             T=n, updates_per_epoch=updates_per_epoch, explore=explore,
             params_axes=params_axes, mesh=mesh, params_specs=params_specs)
-        r_parts.append(np.asarray(rewards))
-        l_parts.append(np.asarray(lats))
-        m_parts.append(np.asarray(moved))
+        # fleet_host == np.asarray off a spanning mesh; on one it
+        # allgathers the trace shards so every process sees the full
+        # [fleet, T] history (multi-host runs return identical Histories
+        # on every process)
+        r_parts.append(fleet_host(rewards))
+        l_parts.append(fleet_host(lats))
+        m_parts.append(fleet_host(moved))
         epoch += n
         maybe_check_finite((states, rewards), f"run_online_fleet epoch {epoch}")
         if checkpoint is not None:
@@ -474,7 +478,7 @@ def run_online_fleet(
     return states, History(rewards=np.concatenate(r_parts, axis=-1),
                            latencies=np.concatenate(l_parts, axis=-1),
                            moved=np.concatenate(m_parts, axis=-1),
-                           final_assignment=np.asarray(env_states.X))
+                           final_assignment=fleet_host(env_states.X))
 
 
 # --------------------------------------------------------------------------

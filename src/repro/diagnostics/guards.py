@@ -168,7 +168,14 @@ def maybe_check_finite(tree, where: str = "") -> None:
         return
     bad: list[str] = []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        arr = np.asarray(leaf)
+        if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+            # process-spanning shard (multi-host fleet): np.asarray would
+            # need a collective; sweep only the rows this process owns
+            arr = np.concatenate(
+                [np.asarray(s.data).reshape(-1)
+                 for s in leaf.addressable_shards])
+        else:
+            arr = np.asarray(leaf)
         if not np.issubdtype(arr.dtype, np.floating):
             continue
         if not np.isfinite(arr).all():

@@ -44,7 +44,16 @@ class MeshPlan:
 
 def plan_mesh(alive_devices: int, model_parallel: int = 16,
               multi_pod: bool = False) -> MeshPlan:
-    """Largest (data, model) grid that fits the survivors."""
+    """Largest (data, model) grid that fits the survivors.
+
+    ``model_parallel=1`` plans the data-only ``(n, 1)`` grid fleet
+    control runs use (``launch.mesh.make_fleet_mesh``); the multi-host
+    driver (``repro.launch.multihost``) calls it that way to size the
+    reduced mesh after a worker process dies."""
+    alive_devices = int(alive_devices)
+    if alive_devices < 1:
+        raise ValueError(
+            f"cannot plan a mesh over {alive_devices} alive device(s)")
     if alive_devices < model_parallel:
         # degrade TP too (rare: an entire pod's worth of failures)
         mp = 1

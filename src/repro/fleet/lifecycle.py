@@ -56,7 +56,8 @@ from repro.core.agent import (History, chunk_schedule, prepare_fleet,
 from repro.core.api import Agent
 from repro.diagnostics import maybe_check_finite
 from repro.dsdps.simulator import lane_params, params_in_axes, stack_env_params
-from repro.sharding.fleet import compaction_size, shard_fleet
+from repro.sharding.fleet import (compaction_size, fleet_host,
+                                  fleet_host_tree, is_spanning, shard_fleet)
 
 
 class StopRule(NamedTuple):
@@ -222,16 +223,22 @@ def run_online_fleet_elastic(
     executed = 0
     t = 0
 
-    def capture(pos: int, states_now, env_states_now) -> None:
+    def host_carries(states_now, env_states_now):
         # chunk-boundary bookkeeping crosses host<->device on purpose, so
         # the diagnostics transfer guard is lifted here (as in the
         # stop-test/compaction block below); the guarded steady state is
-        # the chunk scan itself
+        # the chunk scan itself.  On a process-spanning mesh fleet_host is
+        # a cross-process allgather every process runs identically, so the
+        # host-side lane bookkeeping below stays deterministic and in
+        # lockstep across processes.
         with jax.transfer_guard("allow"):
-            o = int(orig[pos])
-            final_states[o] = jax.tree.map(
-                lambda x: np.asarray(x[pos]), states_now)
-            final_X[o] = np.asarray(env_states_now.X[pos])
+            return fleet_host_tree(states_now), fleet_host_tree(env_states_now)
+
+    def capture(pos: int, host_states, host_env_states) -> None:
+        o = int(orig[pos])
+        final_states[o] = jax.tree.map(lambda x: np.asarray(x[pos]),
+                                       host_states)
+        final_X[o] = np.asarray(host_env_states.X[pos])
 
     for n in chunk_schedule(T, every):
         states, env_states, keys, rewards, lats, moved = run_fleet_chunk(
@@ -241,7 +248,7 @@ def run_online_fleet_elastic(
         executed += len(orig) * n
         maybe_check_finite((states, rewards),
                            f"run_online_fleet_elastic epoch {start_epoch + t + n}")
-        r, l, m = np.asarray(rewards), np.asarray(lats), np.asarray(moved)
+        r, l, m = fleet_host(rewards), fleet_host(lats), fleet_host(moved)
         rows = orig[live]
         rewards_buf[rows, t:t + n] = r[live]
         lats_buf[rows, t:t + n] = l[live]
@@ -266,9 +273,10 @@ def run_online_fleet_elastic(
                 continue
             if not done_rows.any():
                 continue
+            h_states, h_env = host_carries(states, env_states)
             live_pos = np.flatnonzero(live)
             for pos in live_pos[done_rows]:
-                capture(int(pos), states, env_states)
+                capture(int(pos), h_states, h_env)
                 o = int(orig[pos])
                 epochs_run[o] = t
                 rewards_buf[o, t:] = rewards_buf[o, t - 1]
@@ -286,6 +294,17 @@ def run_online_fleet_elastic(
                 if target > n_live:      # pad with most recent passengers
                     passengers = np.flatnonzero(~live)[::-1][:target - n_live]
                     keep = np.sort(np.concatenate([keep, passengers]))
+                if mesh is not None and is_spanning(mesh):
+                    # spanning arrays can't be gathered with plain
+                    # jnp.take on-device (arbitrary cross-process
+                    # gathers); bring the carries home — identically on
+                    # every process — compact on host, and let
+                    # shard_fleet below re-place against the global mesh
+                    keys = fleet_host(keys)
+                    states = fleet_host_tree(states)
+                    env_states = fleet_host_tree(env_states)
+                    if env_params is not None:
+                        env_params = fleet_host_tree(env_params)
                 keys, states, env_states, env_params = compact_lanes(
                     keep, keys, states, env_states, env_params, ref)
                 orig, live = orig[keep], live[keep]
@@ -295,8 +314,10 @@ def run_online_fleet_elastic(
                                     env_params, ref)
 
     # lanes still running at the horizon (or passengers never re-captured)
-    for pos in np.flatnonzero(live):
-        capture(int(pos), states, env_states)
+    if np.any(live):
+        h_states, h_env = host_carries(states, env_states)
+        for pos in np.flatnonzero(live):
+            capture(int(pos), h_states, h_env)
 
     with jax.transfer_guard("allow"):
         states_out = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
@@ -332,9 +353,14 @@ def restore_elastic(checkpoint, states_like, env_states_like, keys_like,
     Returns ``(epoch, keys, states, env_states, env_params, lane_ids)``;
     feed everything straight back into :func:`run_online_fleet_elastic`
     with ``start_epoch=epoch`` and ``lane_ids=lane_ids``."""
+    # on a process-spanning target mesh restore to HOST arrays: the
+    # passenger-dropping row gather below can't run on spanning shards,
+    # and run_online_fleet_elastic's prepare_fleet re-places the compacted
+    # carries against the mesh anyway
+    restore_mesh = None if (mesh is not None and is_spanning(mesh)) else mesh
     epoch, states, env_states, keys, lane_map = checkpoint.restore(
-        states_like, env_states_like, keys_like, epoch=epoch, mesh=mesh,
-        with_lane_map=True)
+        states_like, env_states_like, keys_like, epoch=epoch,
+        mesh=restore_mesh, with_lane_map=True)
     lane_map = np.asarray(lane_map)
     rows = np.flatnonzero(lane_map >= 0)
     ids = lane_map[rows].astype(np.int64)

@@ -47,6 +47,16 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import sys
+
+from repro.launch.mesh import init_distributed, make_fleet_mesh
+
+if "--distributed" in sys.argv:
+    # jax.distributed.initialize must run before ANY jax computation, and
+    # some agent modules build jnp defaults at import time — so the
+    # coordinator handshake happens here, ahead of the heavy imports
+    # below (launch.mesh itself never touches device state on import)
+    init_distributed()
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +69,6 @@ from repro.core.placement import PLACEMENT_SCENARIOS
 from repro.checkpoint.fleet import FleetCheckpoint
 from repro.dsdps import SchedulingEnv, apps, lane_params, scenarios
 from repro.dsdps.apps import default_workload
-from repro.launch.mesh import make_fleet_mesh
 from repro.sharding.fleet import fleet_size
 
 
@@ -99,6 +108,14 @@ def main() -> None:
                     help="partition the fleet axis over every visible "
                          "device (launch.mesh.make_fleet_mesh + shard_map); "
                          "--fleet must be a multiple of the device count")
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host fleet: join a jax.distributed job "
+                         "(coordinator/rank from REPRO_COORDINATOR / "
+                         "REPRO_NUM_PROCESSES / REPRO_PROCESS_ID, see "
+                         "launch.mesh.init_distributed) and shard the "
+                         "fleet over a PROCESS-SPANNING mesh; every "
+                         "process runs this same command "
+                         "(repro.launch.multihost spawns localhost jobs)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="directory for async atomic fleet checkpoints "
                          "(FleetCheckpoint); enables crash recovery")
@@ -141,6 +158,24 @@ def main() -> None:
     args = ap.parse_args()
     if args.fleet < 1:
         ap.error("--fleet must be >= 1")
+    if args.distributed:
+        if args.serve:
+            ap.error("--serve drives a single-process control plane; run "
+                     "it without --distributed")
+        if args.scenario_search:
+            ap.error("--scenario-search runs its own single-process rung "
+                     "fleets; drop --distributed")
+        # already joined at import time (see module top); a no-op
+        # single-process run (no coordinator configured) degrades to
+        # --sharded over the local devices.  Idempotent re-call keeps
+        # programmatic main() invocations honest too.
+        init_distributed()
+        if jax.process_index() != 0:
+            # one report per job: non-zero ranks run the same program but
+            # stay quiet (their results are identical by construction)
+            import os
+            import sys
+            sys.stdout = open(os.devnull, "w")
     if args.agent == "model_based" and args.app == "placement":
         ap.error("model_based profiles a DSDPS cluster; use it with the "
                  "Storm apps")
@@ -205,7 +240,12 @@ def main() -> None:
     states = agent.init_fleet(key, args.fleet, env_params=env_params,
                               env=env)
 
-    mesh = make_fleet_mesh() if args.sharded else None
+    if args.distributed:
+        mesh = make_fleet_mesh(spanning=True)
+    elif args.sharded:
+        mesh = make_fleet_mesh()
+    else:
+        mesh = None
     if mesh is not None and args.fleet % fleet_size(mesh) != 0:
         # elastic degradation: a checkpoint may be resumed on a machine
         # whose device count no longer divides the fleet — run un-sharded

@@ -18,6 +18,13 @@ Two entry points:
   the mesh and return the hashable params PartitionSpec tree the sharded
   program needs.
 
+Meshes may SPAN processes (``launch.mesh.make_fleet_mesh(spanning=True)``
+under ``jax.distributed`` — the multi-host mega-fleet axis):
+:func:`put_global` then assembles global arrays from each process's
+addressable shards instead of ``device_put``, and :func:`fleet_host`
+brings fleet arrays home with a cross-process allgather so every process
+sees identical full traces (docs/sharded_fleets.md#multi-host-fleets).
+
 On :func:`repro.launch.mesh.make_host_mesh` (one CPU device) every spec
 degenerates to a single shard, so the sharded code path stays
 bit-comparable to the plain vmap path — that is what the CPU equivalence
@@ -27,6 +34,58 @@ from __future__ import annotations
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def is_spanning(mesh: Mesh) -> bool:
+    """True when ``mesh`` spans devices of more than one process — the
+    multi-host fleet case (``launch.mesh.make_fleet_mesh(spanning=True)``
+    under ``jax.distributed``).  Spanning meshes change how arrays are
+    placed (each process feeds only its addressable shard:
+    :func:`put_global`) and how results come home
+    (:func:`fleet_host`)."""
+    return any(d.process_index != jax.process_index()
+               for d in mesh.devices.flat)
+
+
+def put_global(x, sharding: NamedSharding):
+    """Place a host (or process-local) value onto ``sharding``.
+
+    For fully-addressable shardings this is plain ``jax.device_put``.
+    For process-spanning shardings ``device_put`` of a host array is
+    illegal, so the global array is assembled with
+    ``jax.make_array_from_callback``: every process holds the SAME full
+    host value (fleet carries are built deterministically from shared
+    seeds, or read back from a checkpoint every process can see) and
+    contributes only the slices its own devices own."""
+    if sharding.is_fully_addressable:
+        return jax.device_put(x, sharding)
+    host = np.asarray(x)
+    return jax.make_array_from_callback(host.shape, sharding,
+                                        lambda idx: host[idx])
+
+
+def fleet_host(x) -> np.ndarray:
+    """Full host value of a fleet array on EVERY process.
+
+    ``np.asarray`` for ordinary (fully-addressable) arrays; for arrays
+    sharded over a process-spanning mesh the fleet-axis shards are
+    re-assembled with a cross-process allgather
+    (``multihost_utils.process_allgather``), and fully-replicated
+    spanning arrays just read their local copy.  Deterministic and
+    identical across processes — which is what lets every process run
+    the same host-side trace accounting / elastic lane bookkeeping
+    without diverging."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        if x.sharding.is_fully_replicated:
+            return np.asarray(x.addressable_shards[0].data)
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+    return np.asarray(x)
+
+
+def fleet_host_tree(tree):
+    """:func:`fleet_host` over every leaf of a pytree."""
+    return jax.tree.map(fleet_host, tree)
 
 
 def fleet_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -118,12 +177,12 @@ def shard_fleet(mesh: Mesh, keys, states, env_states, env_params, ref):
             f"un-sharded vmap path with mesh=None)")
     spec = fleet_spec(mesh)
     shard = NamedSharding(mesh, spec)
-    put = lambda tree: jax.tree.map(lambda x: jax.device_put(x, shard), tree)
-    keys = jax.device_put(keys, shard)
+    put = lambda tree: jax.tree.map(lambda x: put_global(x, shard), tree)
+    keys = put_global(keys, shard)
     states = put(states)
     env_states = put(env_states)
     params_specs = params_partition_specs(env_params, ref, mesh)
     env_params = jax.tree.map(
-        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        lambda x, s: put_global(x, NamedSharding(mesh, s)),
         env_params, params_specs)
     return keys, states, env_states, env_params, params_specs

@@ -1,0 +1,120 @@
+"""Fault-tolerance building blocks: heartbeat failure detection and
+elastic mesh planning (repro/fault/*), plus the device-count-derived
+production mesh (launch.mesh.make_production_mesh) that plan_mesh now
+backs — the pieces the multi-host driver (repro.launch.multihost)
+composes into its kill/heal loop."""
+import jax
+import pytest
+
+from repro.fault.elastic import plan_mesh
+from repro.fault.heartbeat import HeartbeatMonitor
+from repro.launch.mesh import make_production_mesh
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# HeartbeatMonitor
+# --------------------------------------------------------------------------
+def test_newly_dead_fires_once_per_death():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(num_workers=3, timeout_s=1.0, clock=clk)
+    clk.t = 2.0
+    assert mon.newly_dead() == {0, 1, 2}
+    # idempotent: an already-reported death is not re-reported — the
+    # driver must not re-trigger recovery on every poll
+    assert mon.newly_dead() == set()
+    assert mon.newly_dead() == set()
+    # the cumulative view still sees them
+    assert mon.dead_workers() == {0, 1, 2}
+    assert mon.alive == []
+
+
+def test_revival_after_rebeat_rearms_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(num_workers=2, timeout_s=1.0, clock=clk)
+    clk.t = 2.0
+    assert mon.newly_dead() == {0, 1}
+    # worker 1 comes back (a relaunched process beats again): it leaves
+    # the dead set AND its death detection re-arms
+    mon.beat(1)
+    assert mon.dead_workers() == {0}
+    assert mon.alive == [1]
+    assert mon.newly_dead() == set()
+    # ... so a SECOND death of the same worker is reported again
+    clk.t = 4.0
+    assert mon.newly_dead() == {1}
+    assert mon.newly_dead() == set()
+
+
+def test_beats_keep_workers_alive():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(num_workers=2, timeout_s=1.0, clock=clk)
+    for step in range(5):
+        clk.t = step * 0.5
+        mon.beat(0)
+        mon.beat(1)
+        assert mon.newly_dead() == set()
+    assert mon.alive == [0, 1]
+
+
+# --------------------------------------------------------------------------
+# plan_mesh degenerate cases
+# --------------------------------------------------------------------------
+def test_plan_mesh_single_device():
+    plan = plan_mesh(1)
+    assert plan.shape == (1, 1)
+    assert plan.axes == ("data", "model")
+    assert plan.device_count == 1
+
+
+def test_plan_mesh_indivisible_counts():
+    # 3 survivors with model_parallel=16: TP degrades to the largest
+    # power of two that fits (2), data takes the rest (1) — one device
+    # is left out rather than crashing
+    plan = plan_mesh(3, model_parallel=16)
+    assert plan.shape == (1, 2)
+    # 7 survivors, data-only: every device used
+    assert plan_mesh(7, model_parallel=1).shape == (7, 1)
+
+
+def test_plan_mesh_data_only_fleet_plans():
+    # model_parallel=1 is the multi-host fleet driver's call shape: the
+    # grid must be (n, 1) for every survivor count, including 1
+    for n in (1, 2, 3, 5, 8):
+        plan = plan_mesh(n, model_parallel=1)
+        assert plan.shape == (n, 1)
+        assert plan.device_count == n
+
+
+def test_plan_mesh_rejects_no_survivors():
+    with pytest.raises(ValueError, match="alive"):
+        plan_mesh(0)
+    with pytest.raises(ValueError, match="alive"):
+        plan_mesh(-2, model_parallel=1)
+
+
+# --------------------------------------------------------------------------
+# make_production_mesh derives from the visible device count
+# --------------------------------------------------------------------------
+def test_production_mesh_fits_small_hosts():
+    # the old hard-coded 16x16 crashed on anything under 256 devices;
+    # now the mesh is planned over whatever jax actually sees
+    mesh = make_production_mesh()
+    assert set(mesh.axis_names) == {"data", "model"}
+    assert mesh.devices.size <= jax.device_count()
+    assert mesh.devices.size >= 1
+
+
+def test_production_mesh_multi_pod_degrades_gracefully():
+    # multi_pod only adds the leading pod axis when the data extent is
+    # even; on a small host it falls back to the flat (data, model) grid
+    mesh = make_production_mesh(multi_pod=True)
+    assert mesh.axis_names in (("data", "model"), ("pod", "data", "model"))
+    assert mesh.devices.size <= jax.device_count()

@@ -1,0 +1,227 @@
+"""Multi-host mega-fleet contracts (subprocess harness).
+
+Everything here runs REAL multi-process jax jobs: N localhost worker
+processes joined through ``launch.mesh.init_distributed`` (coordinator +
+gloo CPU collectives), each exposing K emulated CPU devices
+(``--xla_force_host_platform_device_count``), sharding one fleet over a
+process-SPANNING mesh (``make_fleet_mesh(spanning=True)``).
+
+Pinned contracts:
+
+* **bit-match** — the same total lane grid produces BIT-identical
+  traces whether the (4, 1) fleet mesh lives in 1 process x 4 devices
+  or 2 processes x 2 devices (lanes are independent, shard_map bodies
+  have no collectives, per-device partitions are identical);
+* **host-elastic restore** — an elastic-lifecycle run checkpointed by a
+  2-process job (per-process shard layout, ``step_N/proc_P/`` +
+  ``meta.json``) restores on a SINGLE process via ``restore_elastic``
+  with the surviving-lane accounting intact, and completes.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.launch.multihost import free_port, worker_env
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _launch(script: str, n_procs: int, devices_per_proc: int,
+            extra_env: dict | None = None, timeout: int = 900,
+            sentinel: str = "MH_OK") -> list[str]:
+    """Run ``script`` as ``n_procs`` coordinated worker processes; assert
+    every rank exits 0 and prints the sentinel; return their outputs."""
+    coordinator = f"127.0.0.1:{free_port()}"
+    base = dict(os.environ)
+    base["PYTHONPATH"] = _SRC + os.pathsep + base.get("PYTHONPATH", "")
+    base.update(extra_env or {})
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", script],
+        env=worker_env(base, coordinator, n_procs, pid, devices_per_proc),
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+        for pid in range(n_procs)]
+    outs = []
+    for pid, p in enumerate(procs):
+        out, _ = p.communicate(timeout=timeout)
+        outs.append(out)
+        assert p.returncode == 0, \
+            f"rank {pid}/{n_procs} failed:\n{out}"
+        assert sentinel in out, f"rank {pid}/{n_procs}:\n{out}"
+    return outs
+
+
+_FLEET_TRACE_SCRIPT = textwrap.dedent("""
+    import os
+    from repro.launch.mesh import init_distributed, make_fleet_mesh
+    pid, n = init_distributed()
+    import jax, numpy as np
+    from repro.core import make_agent, run_online_fleet
+    from repro.dsdps import SchedulingEnv, apps, scenarios
+    from repro.dsdps.apps import default_workload
+
+    topo = apps.continuous_queries("small")
+    env = SchedulingEnv(topo, default_workload(topo))
+    agent = make_agent("ddpg", env, k_nn=4)
+    F, T = 4, 6
+    params = scenarios.build("one_slow_machine", env, F,
+                             broadcast_invariant=True)
+    states = agent.init_fleet(jax.random.PRNGKey(0), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    mesh = make_fleet_mesh(spanning=True)
+    assert mesh.devices.size == 4, mesh
+    _, h = run_online_fleet(keys, env, agent, states, T=T,
+                            env_params=params, mesh=mesh)
+    # fleet_host made the full traces identical on every process; any
+    # rank could write — rank 0 does
+    if pid == 0:
+        np.savez(os.environ["MH_OUT"], rewards=h.rewards,
+                 latencies=h.latencies, moved=h.moved,
+                 X=h.final_assignment)
+    print("MH_OK")
+""")
+
+
+def test_two_process_bit_match(tmp_path):
+    """The tentpole acceptance gate: 2 procs x 2 devices == 1 proc x 4
+    devices, bit for bit, on the same total lane grid."""
+    out_1p = tmp_path / "one_proc.npz"
+    out_2p = tmp_path / "two_proc.npz"
+    _launch(_FLEET_TRACE_SCRIPT, n_procs=1, devices_per_proc=4,
+            extra_env={"MH_OUT": str(out_1p)})
+    _launch(_FLEET_TRACE_SCRIPT, n_procs=2, devices_per_proc=2,
+            extra_env={"MH_OUT": str(out_2p)})
+    a, b = np.load(out_1p), np.load(out_2p)
+    for name in ("rewards", "latencies", "moved", "X"):
+        np.testing.assert_array_equal(a[name], b[name], err_msg=name)
+
+
+_ELASTIC_SAVE_SCRIPT = textwrap.dedent("""
+    import os
+    from repro.launch.mesh import init_distributed, make_fleet_mesh
+    pid, n = init_distributed()
+    assert n == 2
+    import jax, numpy as np
+    from repro.checkpoint.fleet import FleetCheckpoint
+    from repro.core import make_agent
+    from repro.fleet.lifecycle import run_online_fleet_elastic
+    from repro.dsdps import SchedulingEnv, apps, scenarios
+    from repro.dsdps.apps import default_workload
+
+    topo = apps.continuous_queries("small")
+    env = SchedulingEnv(topo, default_workload(topo))
+    agent = make_agent("ddpg", env, k_nn=4)
+    F, T = 4, 6
+    params = scenarios.build("one_slow_machine", env, F,
+                             broadcast_invariant=True)
+    states = agent.init_fleet(jax.random.PRNGKey(0), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    mesh = make_fleet_mesh(spanning=True)
+
+    def stop_lane0(rewards_so_far, t):
+        done = np.zeros(rewards_so_far.shape[0], bool)
+        if t == 2:
+            done[0] = True            # lane 0 "converges" at the first cut
+        return done
+
+    ck = FleetCheckpoint(os.environ["MH_CK"], every=2, use_async=False)
+    res = run_online_fleet_elastic(keys, env, agent, states, T=T,
+                                   env_params=params, mesh=mesh,
+                                   checkpoint=ck, stop_fn=stop_lane0)
+    ck.close()
+    assert res.epochs_run.tolist() == [2, T, T, T], res.epochs_run
+    # the published snapshots use the per-process shard layout
+    assert ck.is_multihost(), "expected multihost step layout"
+    assert ck.has_lane_map(), "expected an elastic lane map"
+    if pid == 0:
+        np.savez(os.environ["MH_OUT"], rewards=res.history.rewards,
+                 epochs_run=res.epochs_run, lane_ids=res.lane_ids)
+    print("MH_OK")
+""")
+
+_ELASTIC_RESTORE_SCRIPT = textwrap.dedent("""
+    import os
+    import jax, numpy as np
+    from repro.checkpoint.fleet import FleetCheckpoint
+    from repro.core import make_agent, reset_fleet_states
+    from repro.fleet.lifecycle import restore_elastic, run_online_fleet_elastic
+    from repro.dsdps import SchedulingEnv, apps, scenarios
+    from repro.dsdps.apps import default_workload
+
+    assert jax.process_count() == 1       # single-process restore side
+    topo = apps.continuous_queries("small")
+    env = SchedulingEnv(topo, default_workload(topo))
+    agent = make_agent("ddpg", env, k_nn=4)
+    F, T = 4, 6
+    params = scenarios.build("one_slow_machine", env, F,
+                             broadcast_invariant=True)
+    states = agent.init_fleet(jax.random.PRNGKey(0), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    like_env = reset_fleet_states(keys, env, params)
+
+    ck = FleetCheckpoint(os.environ["MH_CK"], every=2, use_async=False)
+    assert ck.is_multihost(), "snapshot should be in multihost layout"
+    # the 2-process run published steps 2/4/6; resume from the mid-run
+    # snapshot so there are epochs left to complete single-process
+    epoch, keys2, states2, env_states2, params2, ids = restore_elastic(
+        ck, states, like_env, keys, env_params=params,
+        ref=env.default_params(), epoch=4)
+    # lane 0 stopped during the 2-process run: only lanes 1..3 survive,
+    # named by their ORIGINAL ids
+    assert ids.tolist() == [1, 2, 3], ids
+    assert int(np.asarray(keys2).shape[0]) == 3
+    never = lambda rewards_so_far, t: np.zeros(rewards_so_far.shape[0], bool)
+    res = run_online_fleet_elastic(keys2, env, agent, states2,
+                                   T=T - epoch, env_params=params2,
+                                   env_states=env_states2,
+                                   start_epoch=epoch, lane_ids=ids,
+                                   stop_fn=never)
+    assert res.lane_ids.tolist() == [1, 2, 3]
+    assert res.history.rewards.shape == (3, T - epoch)
+    print("MH_OK")
+""")
+
+
+def test_elastic_checkpoint_restores_across_host_counts(tmp_path):
+    """A 2-process elastic run writes per-process shard checkpoints; a
+    1-process job restores them, keeps the surviving-lane accounting
+    (original lane ids), and completes the remaining epochs."""
+    ck_dir = tmp_path / "mh_ck"
+    out = tmp_path / "elastic_run.npz"
+    _launch(_ELASTIC_SAVE_SCRIPT, n_procs=2, devices_per_proc=2,
+            extra_env={"MH_CK": str(ck_dir), "MH_OUT": str(out)})
+    run = np.load(out)
+    assert run["epochs_run"].tolist() == [2, 6, 6, 6]
+    assert run["lane_ids"].tolist() == [0, 1, 2, 3]
+    # the step directories really are the per-process shard layout
+    steps = sorted(p.name for p in ck_dir.glob("step_*"))
+    assert steps, "no checkpoints published"
+    newest = ck_dir / steps[-1]
+    assert (newest / "meta.json").exists()
+    meta = json.loads((newest / "meta.json").read_text())
+    assert meta["process_count"] == 2
+    assert sorted(p.name for p in newest.glob("proc_*")) == \
+        ["proc_00000", "proc_00001"]
+    # restore + resume on ONE process (4 local devices not required:
+    # the un-meshed vmap path finishes the run)
+    _launch(_ELASTIC_RESTORE_SCRIPT, n_procs=1, devices_per_proc=1,
+            extra_env={"MH_CK": str(ck_dir)})
+
+
+def test_worker_env_wiring(tmp_path):
+    """worker_env forces the CPU platform, the emulated device count, and
+    the three REPRO_* coordinates init_distributed reads."""
+    env = worker_env({"XLA_FLAGS": "--foo"}, "127.0.0.1:1234", 2, 1, 8)
+    assert env["REPRO_COORDINATOR"] == "127.0.0.1:1234"
+    assert env["REPRO_NUM_PROCESSES"] == "2"
+    assert env["REPRO_PROCESS_ID"] == "1"
+    assert env["JAX_PLATFORMS"] == "cpu"
+    assert "--foo" in env["XLA_FLAGS"]
+    assert "--xla_force_host_platform_device_count=8" in env["XLA_FLAGS"]

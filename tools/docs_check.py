@@ -32,12 +32,21 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
 # repo-relative markdown files whose first ```python block must stay
-# executable (extract-and-exec'd in the CI docs job)
+# executable (extract-and-exec'd in the CI docs job).  A "#anchor"
+# suffix scopes the extraction to the first ```python block AFTER that
+# heading (github slug rules), so mid-document snippets register too.
 EXECUTABLE_DOCS = (
     "README.md",
     "docs/elastic_fleets.md",
     "docs/serving.md",
+    "docs/sharded_fleets.md#multi-host-fleets",
 )
+
+
+def _anchor_slug(heading: str) -> str:
+    """Github's heading → anchor slug (enough of it for our docs)."""
+    slug = re.sub(r"[^\w\- ]", "", heading.strip().lower())
+    return slug.replace(" ", "-")
 
 
 def markdown_files() -> list[pathlib.Path]:
@@ -61,12 +70,22 @@ def check_links() -> list[tuple[pathlib.Path, str]]:
     return broken
 
 
-def extract_example(rel_path: str) -> str:
-    """The first ```python fenced block of a repo-relative markdown file."""
+def extract_example(entry: str) -> str:
+    """The first ```python fenced block of a repo-relative markdown file;
+    with a ``#anchor`` suffix, the first block after that heading."""
+    rel_path, _, anchor = entry.partition("#")
     text = (REPO / rel_path).read_text()
+    if anchor:
+        for m in re.finditer(r"^#+\s+(.+?)\s*$", text, re.MULTILINE):
+            if _anchor_slug(m.group(1)) == anchor:
+                text = text[m.end():]
+                break
+        else:
+            raise SystemExit(f"{rel_path} has no heading with "
+                             f"anchor #{anchor}")
     m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
     if m is None:
-        raise SystemExit(f"{rel_path} has no ```python example block")
+        raise SystemExit(f"{entry} has no ```python example block")
     return m.group(1)
 
 
