@@ -62,10 +62,12 @@ def _params_bytes(params) -> int:
                for x in jax.tree_util.tree_leaves(params))
 
 
-def provenance(mesh_shape=None) -> dict:
+def provenance(mesh_shape=None, agent=None) -> dict:
     """Where this row was measured: pinned on every JSON row so numbers
     from different machines / backends / process topologies never get
-    compared as like-for-like by accident."""
+    compared as like-for-like by accident.  ``agent`` additionally pins
+    WHICH agent kind produced the row (the --streaming rows compare agent
+    kinds, so the name must survive into the artifact)."""
     out = {
         "jax": jax.__version__,
         "backend": jax.default_backend(),
@@ -75,6 +77,8 @@ def provenance(mesh_shape=None) -> dict:
     }
     if mesh_shape is not None:
         out["mesh_shape"] = [int(s) for s in mesh_shape]
+    if agent is not None:
+        out["agent"] = agent
     return out
 
 
@@ -296,6 +300,97 @@ def run_all(fleet: int = 32, epochs: int = 300, app: str = "cq_small",
 
 
 # --------------------------------------------------------------------------
+# streaming lanes: replay-free Stream Q(λ)/AC(λ) vs the replay agents
+# --------------------------------------------------------------------------
+HBM_BUDGET_GIB = 16.0    # reference accelerator memory for the width ceiling
+
+
+def _replay_bytes(states) -> int:
+    return _params_bytes(states.replay) if hasattr(states, "replay") else 0
+
+
+def _trace_bytes(states) -> int:
+    total = 0
+    for leaf in ("z", "z_actor", "z_critic"):
+        if hasattr(states, leaf):
+            total += _params_bytes(getattr(states, leaf))
+    return total
+
+
+def run_streaming(fleet: int = 4, epochs: int = 300,
+                  app: str = "cq_small") -> list[tuple]:
+    """The replay-free streaming story in three rows per agent pair:
+
+    * parity — final smoothed (per-lane min-max-normalized, filtfilt)
+      reward of the streaming fleet over the replay fleet, same seeds,
+      plus warm lane-epochs/sec for both;
+    * memory — per-lane carry bytes side by side (streaming lanes report
+      ZERO replay bytes; the carry is nets + traces + the Welford
+      normalizer) and the shrink factor;
+    * width ceiling — how many lanes of each kind fit a reference
+      HBM_BUDGET_GIB accelerator, i.e. the fleet-width cap moving.
+
+    Every row's provenance block carries the streaming agent kind."""
+    topo = apps.ALL_APPS[app]()
+    env = SchedulingEnv(topo, default_workload(topo))
+    rows = []
+    budget = int(HBM_BUDGET_GIB * 2**30)
+    for replay_name, stream_name in (("dqn", "stream_q"),
+                                     ("ddpg", "stream_ac")):
+        results = {}
+        for name in (replay_name, stream_name):
+            agent = make_agent(name, env)
+            states = agent.init_fleet(jax.random.PRNGKey(0), fleet)
+            keys = jax.random.split(jax.random.PRNGKey(1), fleet)
+            run_online_fleet(keys, env, agent, states, T=epochs)  # compile
+            t0 = time.perf_counter()
+            _, hist = run_online_fleet(keys, env, agent, states, T=epochs)
+            dt = time.perf_counter() - t0
+            k = max(1, min(20, epochs // 4))
+            results[name] = {
+                "final": float(hist.smoothed_rewards()[:, -k:].mean()),
+                "eps": fleet * epochs / dt,
+                "carry": _params_bytes(states) // fleet,
+                "replay": _replay_bytes(states) // fleet,
+                "traces": _trace_bytes(states) // fleet,
+            }
+        rep, st = results[replay_name], results[stream_name]
+        parity = st["final"] / max(rep["final"], 1e-9)
+        rows.append((
+            f"fleet_bench_{app}_streaming_{stream_name}_vs_{replay_name}"
+            f"_f{fleet}_T{epochs}",
+            1e6 / st["eps"],
+            f"parity_final_smoothed={parity:.3f};"
+            f"{stream_name}_final={st['final']:.4f};"
+            f"{replay_name}_final={rep['final']:.4f};"
+            f"{stream_name}_lane_epochs_per_sec={st['eps']:.1f};"
+            f"{replay_name}_lane_epochs_per_sec={rep['eps']:.1f}",
+            provenance(agent=stream_name)))
+        shrink = rep["carry"] / max(st["carry"], 1)
+        rows.append((
+            f"fleet_bench_{app}_streaming_memory_{stream_name}_f{fleet}",
+            0.0,
+            f"carry_bytes_per_lane={st['carry']};"
+            f"replay_bytes_per_lane={st['replay']};"
+            f"trace_bytes_per_lane={st['traces']};"
+            f"{replay_name}_carry_bytes_per_lane={rep['carry']};"
+            f"{replay_name}_replay_bytes_per_lane={rep['replay']};"
+            f"carry_shrink_vs_{replay_name}={shrink:.1f}x",
+            provenance(agent=stream_name)))
+        width_replay = budget // max(rep["carry"], 1)
+        width_stream = budget // max(st["carry"], 1)
+        rows.append((
+            f"fleet_bench_{app}_fleet_width_ceiling_{stream_name}",
+            0.0,
+            f"hbm_budget_gib={HBM_BUDGET_GIB:.0f};"
+            f"max_fleet_width_{replay_name}={width_replay};"
+            f"max_fleet_width_{stream_name}={width_stream};"
+            f"widening={width_stream / max(width_replay, 1):.1f}x",
+            provenance(agent=stream_name)))
+    return rows
+
+
+# --------------------------------------------------------------------------
 # multi-host scaling: N localhost processes, one process-spanning mesh
 # --------------------------------------------------------------------------
 def run_multihost_worker(fleet: int, epochs: int, app: str,
@@ -427,6 +522,15 @@ def main() -> None:
                          "runtime tracing-discipline guards "
                          "(repro.diagnostics.guards) and record the "
                          "steady-state overhead vs the unguarded warm run")
+    ap.add_argument("--streaming", action="store_true",
+                    help="also run the replay-free streaming lanes "
+                         "(stream_q/stream_ac) against their replay "
+                         "counterparts (dqn/ddpg) and record reward "
+                         "parity, per-lane carry bytes (zero replay "
+                         "bytes), and the fleet-width ceiling moving")
+    ap.add_argument("--streaming-fleet", type=int, default=4,
+                    help="fleet width of the --streaming comparison runs "
+                         "(memory rows are per-lane, so small is fine)")
     ap.add_argument("--multihost", action="store_true",
                     help="also run the multi-host scaling sweep: launch "
                          "1/2/4 localhost worker processes joined into one "
@@ -453,6 +557,8 @@ def main() -> None:
     rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
                    args.scenario_batched, args.broadcast_invariant,
                    args.sharded, args.lifecycle, args.guards)
+    if args.streaming:
+        rows += run_streaming(args.streaming_fleet, args.epochs, args.app)
     if args.multihost:
         rows += run_multihost(args.fleet, args.epochs, args.app,
                               smoke=args.smoke,

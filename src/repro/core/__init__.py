@@ -1,9 +1,13 @@
 # The paper's primary contribution: DRL-based model-free control for
 # distributed stream data processing (and its TPU instantiation).
-from repro.core.api import (Agent, agent_names, make_agent,
+from repro.core.api import (Agent, agent_families, agent_names, make_agent,
                             make_epoch_step, register_agent)
 from repro.core.ddpg import DDPGConfig, DDPGState, init_state as ddpg_init
 from repro.core.dqn import DQNConfig, DQNState, init_state as dqn_init
+from repro.core.stream_q import (StreamQConfig, StreamQState,
+                                 init_state as stream_q_init)
+from repro.core.stream_ac import (StreamACConfig, StreamACState,
+                                  init_state as stream_ac_init)
 from repro.core.agent import (History, reset_fleet_states, run_online_agent,
                               run_online_ddpg_python, run_online_dqn_python,
                               run_online_fleet)
@@ -22,9 +26,12 @@ from repro.core.round_robin import round_robin
 from repro.core import spaces
 
 __all__ = [
-    "Agent", "agent_names", "make_agent", "make_epoch_step", "register_agent",
+    "Agent", "agent_families", "agent_names", "make_agent",
+    "make_epoch_step", "register_agent",
     "DDPGConfig", "DDPGState", "ddpg_init",
     "DQNConfig", "DQNState", "dqn_init",
+    "StreamQConfig", "StreamQState", "stream_q_init",
+    "StreamACConfig", "StreamACState", "stream_ac_init",
     "History", "reset_fleet_states", "run_online_agent", "run_online_fleet",
     "run_online_ddpg_python", "run_online_dqn_python",
     "knn_actions_exact", "knn_actions_jax", "knn_assignments_exact",

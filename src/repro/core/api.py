@@ -36,7 +36,9 @@ and learners run through the same one-XLA-program fleet path.
     states = agent.init_fleet(key, fleet=8)
     states, hist = run_online_fleet(keys, env, agent, states, T=300)
 
-Built-in names: ``ddpg``, ``dqn``, ``round_robin``, ``model_based``.
+Built-in names: ``ddpg``, ``dqn``, ``stream_q``, ``stream_ac``,
+``round_robin``, ``model_based`` (plus the serving-only ``rate_control``
+and ``auto_tune`` action-space policies).
 The runners take Agent bundles ONLY — the PR-2 window during which bare
 DDPG/DQN configs were coerced has closed; wrap a ready config with
 ``make_agent(name, env, cfg=cfg)``.  The full interface contract is
@@ -172,11 +174,29 @@ def params_are_stacked(env, env_params) -> bool:
 # Registry
 # --------------------------------------------------------------------------
 _REGISTRY: dict[str, Callable[..., Agent]] = {}
+_FAMILIES: dict[str, tuple[str, ...]] = {}
+
+# the two env families sharing the functional surface (reset/step/
+# state_vector/default_params + N/M/state_dim): the DSDPS SchedulingEnv
+# and the TPU ExpertPlacementEnv instantiation
+ENV_FAMILIES = ("scheduling", "placement")
 
 
-def register_agent(name: str, factory: Callable[..., Agent]) -> None:
-    """Register ``factory(env, **overrides) -> Agent`` under ``name``."""
+def register_agent(name: str, factory: Callable[..., Agent],
+                   families: tuple[str, ...] = ENV_FAMILIES) -> None:
+    """Register ``factory(env, **overrides) -> Agent`` under ``name``.
+
+    ``families`` declares which env families the agent's actions are valid
+    for (subset of :data:`ENV_FAMILIES`; empty for serving-only policies
+    whose action spaces never reach ``env.step``) — the registry
+    completeness test drives every registered agent through one fused
+    epoch step on each family it declares."""
+    unknown = set(families) - set(ENV_FAMILIES)
+    if unknown:
+        raise ValueError(f"unknown env families {sorted(unknown)}; "
+                         f"known: {ENV_FAMILIES}")
     _REGISTRY[name] = factory
+    _FAMILIES[name] = tuple(families)
 
 
 def _load_builtins() -> None:
@@ -187,12 +207,25 @@ def _load_builtins() -> None:
     import repro.core.dqn         # noqa: F401
     import repro.core.model_based  # noqa: F401
     import repro.core.round_robin  # noqa: F401
+    import repro.core.stream_ac   # noqa: F401
+    import repro.core.stream_q    # noqa: F401
 
 
 def agent_names() -> tuple[str, ...]:
     """Registered agent names (builtin + user-registered)."""
     _load_builtins()
     return tuple(sorted(_REGISTRY))
+
+
+def agent_families(name: str) -> tuple[str, ...]:
+    """Env families ``name`` declared at registration (see
+    :func:`register_agent`); empty tuple = serving-only."""
+    _load_builtins()
+    try:
+        return _FAMILIES[name]
+    except KeyError:
+        raise KeyError(f"unknown agent {name!r}; "
+                       f"known: {sorted(_REGISTRY)}") from None
 
 
 def make_agent(name: str, env, **overrides) -> Agent:

@@ -88,7 +88,9 @@ def rate_control_factory(env, **overrides) -> api.Agent:
     return rate_control_agent(cfg)
 
 
-api.register_agent("rate_control", rate_control_factory)
+# serving-only: rate actions are [S, L] level choices, not executor→machine
+# placements — they never reach env.step (families=())
+api.register_agent("rate_control", rate_control_factory, families=())
 
 
 # --------------------------------------------------------------------------
@@ -136,4 +138,5 @@ def auto_tune_factory(env, **overrides) -> api.Agent:
     return auto_tune_agent(cfg)
 
 
-api.register_agent("auto_tune", auto_tune_factory)
+# serving-only, like rate_control: actions index the tuning grid
+api.register_agent("auto_tune", auto_tune_factory, families=())

@@ -41,6 +41,36 @@ def apply_mlp(params: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
     return h
 
 
+def sparse_init(key: jax.Array, sizes: Sequence[int],
+                sparsity: float = 0.9) -> MLPParams:
+    """Sparse LeCun-uniform init for the streaming agents (arXiv 2410.14606).
+
+    Each layer draws U(−1/√fan_in, 1/√fan_in) and zeroes a fixed
+    ``sparsity`` fraction of the incoming weights of every output unit —
+    the remaining active weights start proportionally larger relative to
+    the dead ones, which the streaming paper shows protects single-sample
+    TD(λ) updates from early interference.  Returns the same
+    :class:`MLPParams` structure as :func:`init_mlp`, so traces, ObGD, and
+    every pytree-shaped fleet operation apply unchanged."""
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0, 1); got {sparsity}")
+    ws, bs = [], []
+    for k, (din, dout) in zip(
+        jax.random.split(key, len(sizes) - 1), zip(sizes[:-1], sizes[1:])
+    ):
+        kw, km = jax.random.split(k)
+        lim = 1.0 / jnp.sqrt(jnp.asarray(din, jnp.float32))
+        w = jax.random.uniform(kw, (din, dout), jnp.float32, -lim, lim)
+        n_zero = int(round(sparsity * din))
+        # exactly n_zero zeros per output unit: rank a uniform draw along
+        # fan_in and kill the lowest-ranked entries of each column
+        u = jax.random.uniform(km, (din, dout))
+        ranks = jnp.argsort(jnp.argsort(u, axis=0), axis=0)
+        ws.append(jnp.where(ranks < n_zero, 0.0, w))
+        bs.append(jnp.zeros((dout,), jnp.float32))
+    return MLPParams(weights=tuple(ws), biases=tuple(bs))
+
+
 def init_actor(key: jax.Array, state_dim: int, action_dim: int) -> MLPParams:
     return init_mlp(key, (state_dim, *HIDDEN, action_dim))
 

@@ -1,0 +1,212 @@
+"""Stream AC(λ) — replay-free actor-critic online control (arXiv 2410.14606).
+
+The actor-critic counterpart of :mod:`stream_q`, and the streaming
+replacement for the DDPG lane.  Instead of DDPG's proto-action + K-NN
+projection over a continuous relaxation, the actor is a *factorized
+discrete* policy: logits [N, M], one categorical per executor row, so an
+action is always a valid one-hot assignment by construction — no
+projection step, no critic argmax over candidates.  The critic learns
+V(s) (not Q(s, a)), which single-transition TD(λ) bootstraps directly.
+
+Per-lane carry: actor + critic params, one eligibility-trace pytree per
+net, the shared Welford observation normalizer, and one pending TD error.
+No replay, no target nets, no Adam moments — both updates are ObGD steps,
+with the actor trace accumulating ∇ log π(a|s) (summed over executor
+rows) and the critic trace accumulating ∇V(s)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core import networks as nets
+from repro.core.streaming import (ObsNorm, norm_apply, norm_init,
+                                  norm_update, obgd_step, reward_norm_update,
+                                  trace_decay_add, trace_zeros_like)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamACConfig:
+    n_executors: int
+    n_machines: int
+    state_dim: int
+    gamma: float = 0.99
+    lam: float = 0.9             # eligibility-trace decay λ (both nets)
+    lr_actor: float = 1.0        # ObGD base stepsizes (self-throttling)
+    lr_critic: float = 1.0
+    kappa: float = 2.0           # ObGD overshoot margin
+    # lean nets, same story as StreamQConfig: reward parity with DDPG
+    # holds at (8, 8) (pinned in tests/test_streaming.py) and the per-lane
+    # carry drops ~74× vs the DDPG lane.  Unlike stream_q the full 0.9
+    # zero fraction stays the stronger setting here — softmax sampling
+    # keeps gradients flowing through all rows from epoch 0
+    sparsity: float = 0.9
+    hidden: tuple = (8, 8)
+    reward_scale: float = 0.25
+    # sampling-temperature schedule: softmax sampling is the exploration
+    # mechanism, so anneal it the way the replay agents anneal ε — early
+    # epochs sample near-uniformly, late epochs act near-greedily (the
+    # log π gradient uses the SAME tempered logits, so updates stay
+    # on-policy)
+    temp_start: float = 1.0
+    temp_end: float = 0.02
+    temp_decay_epochs: int = 300
+
+    def temperature(self, epoch: jnp.ndarray) -> jnp.ndarray:
+        frac = jnp.clip(epoch.astype(jnp.float32) / self.temp_decay_epochs,
+                        0.0, 1.0)
+        return self.temp_start + frac * (self.temp_end - self.temp_start)
+
+    @property
+    def action_dim(self) -> int:
+        return self.n_executors * self.n_machines
+
+
+class StreamACState(NamedTuple):
+    actor: nets.MLPParams        # logits head [N·M]
+    critic: nets.MLPParams       # V(s) head [1]
+    z_actor: nets.MLPParams
+    z_critic: nets.MLPParams
+    norm: ObsNorm
+    delta: jnp.ndarray           # pending TD error (consumed by update)
+    epoch: jnp.ndarray
+    r_mean: jnp.ndarray = jnp.zeros(())
+    r_var: jnp.ndarray = jnp.ones(())
+    r_count: jnp.ndarray = jnp.zeros((), jnp.int32)
+
+
+def init_state(key: jax.Array, cfg: StreamACConfig) -> StreamACState:
+    ka, kc = jax.random.split(key)
+    actor = nets.sparse_init(
+        ka, (cfg.state_dim, *cfg.hidden, cfg.action_dim),
+        sparsity=cfg.sparsity)
+    critic = nets.sparse_init(
+        kc, (cfg.state_dim, *cfg.hidden, 1), sparsity=cfg.sparsity)
+    return StreamACState(
+        actor=actor,
+        critic=critic,
+        z_actor=trace_zeros_like(actor),
+        z_critic=trace_zeros_like(critic),
+        norm=norm_init(cfg.state_dim),
+        delta=jnp.zeros(()),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+def _logits(actor: nets.MLPParams, cfg: StreamACConfig, x,
+            temp) -> jnp.ndarray:
+    raw = nets.apply_mlp(actor, x).reshape(cfg.n_executors, cfg.n_machines)
+    return raw / temp
+
+
+def select_assignment(key, state: StreamACState, cfg: StreamACConfig, s_vec,
+                      explore: bool = True):
+    """Sample (or argmax) one machine per executor row.
+
+    Softmax sampling IS the exploration mechanism: sparse init starts the
+    logits near zero, i.e. near-uniform assignment — the streaming
+    counterpart of the replay agents' ε-schedules."""
+    x = norm_apply(state.norm, s_vec)
+    logits = _logits(state.actor, cfg, x, cfg.temperature(state.epoch))
+    if explore:
+        machines = jax.random.categorical(key, logits, axis=-1)
+    else:
+        machines = jnp.argmax(logits, axis=-1)
+    action = jax.nn.one_hot(machines, cfg.n_machines, dtype=jnp.float32)
+    return action, machines
+
+
+def observe(cfg: StreamACConfig, state: StreamACState, s_vec, aux, reward,
+            s_next) -> StreamACState:
+    """Fold one transition into both trace pytrees; stash the TD error."""
+    machines = aux
+    r_std, r_mean, r_var, r_count = reward_norm_update(
+        reward, state.r_mean, state.r_var, state.r_count,
+        scale=cfg.reward_scale)
+    x = norm_apply(state.norm, s_vec)
+    x_next = norm_apply(state.norm, s_next)
+    v, grad_v = jax.value_and_grad(
+        lambda p: nets.apply_mlp(p, x)[0])(state.critic)
+    v_next = nets.apply_mlp(state.critic, x_next)[0]
+    delta = r_std + cfg.gamma * v_next - v
+
+    def logp(p):
+        lp = jax.nn.log_softmax(
+            _logits(p, cfg, x, cfg.temperature(state.epoch)), axis=-1)
+        rows = jnp.arange(cfg.n_executors)
+        return lp[rows, machines].sum()
+
+    grad_pi = jax.grad(logp)(state.actor)
+    decay = cfg.gamma * cfg.lam
+    return state._replace(
+        z_actor=trace_decay_add(state.z_actor, grad_pi, decay),
+        z_critic=trace_decay_add(state.z_critic, grad_v, decay),
+        delta=delta,
+        norm=norm_update(state.norm, s_vec),
+        r_mean=r_mean, r_var=r_var, r_count=r_count)
+
+
+def update(state: StreamACState, cfg: StreamACConfig) -> StreamACState:
+    """Apply both pending ObGD TD steps, then consume the error (δ = 0
+    makes repeat calls exact no-ops — one TD step per transition)."""
+    critic = obgd_step(state.critic, state.z_critic, state.delta,
+                       cfg.lr_critic, cfg.kappa)
+    actor = obgd_step(state.actor, state.z_actor, state.delta,
+                      cfg.lr_actor, cfg.kappa)
+    return state._replace(actor=actor, critic=critic, delta=jnp.zeros(()))
+
+
+def tick(state: StreamACState) -> StreamACState:
+    return state._replace(epoch=state.epoch + 1)
+
+
+# --------------------------------------------------------------------------
+# Agent-interface adapter — hooks for the generic api.make_epoch_step.
+# --------------------------------------------------------------------------
+def _agent_init(key, cfg: StreamACConfig, env_params=None):
+    return init_state(key, cfg)
+
+
+def _agent_select(key, cfg: StreamACConfig, state, s_vec, env_state,
+                  env_params, explore):
+    return select_assignment(key, state, cfg, s_vec, explore=explore)
+
+
+def _agent_observe(cfg: StreamACConfig, state, s_vec, aux, reward, s_next):
+    return observe(cfg, state, s_vec, aux, reward, s_next)
+
+
+def _agent_update(key, cfg: StreamACConfig, state):
+    return update(state, cfg)
+
+
+def _agent_tick(cfg: StreamACConfig, state):
+    return tick(state)
+
+
+def as_agent(cfg: StreamACConfig) -> api.Agent:
+    """Stream AC(λ) as a pluggable Agent bundle."""
+    return api.Agent(name="stream_ac", cfg=cfg, init_fn=_agent_init,
+                     select_fn=_agent_select, observe_fn=_agent_observe,
+                     update_fn=_agent_update, tick_fn=_agent_tick)
+
+
+def agent_factory(env, **overrides) -> api.Agent:
+    """Registry hook: size a StreamACConfig for ``env`` (or pass ``cfg=``)."""
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = StreamACConfig(n_executors=env.N, n_machines=env.M,
+                             state_dim=env.state_dim, **overrides)
+    return as_agent(cfg)
+
+
+api.register_agent("stream_ac", agent_factory)
+
+
+def init_fleet(key: jax.Array, cfg: StreamACConfig,
+               fleet: int) -> StreamACState:
+    """Independently-initialized per-lane states stacked on [fleet]."""
+    return jax.vmap(lambda k: init_state(k, cfg))(jax.random.split(key, fleet))

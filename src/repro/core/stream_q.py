@@ -1,0 +1,187 @@
+"""Stream Q(λ) — replay-free online control (arXiv 2410.14606).
+
+Same restricted move space as the DQN baseline — action (i, j) re-assigns
+executor i to machine j, |A| = N·M — but the per-lane carry holds NO
+replay buffer, NO target network, and NO Adam state.  What rides the scan
+instead:
+
+  * eligibility traces ``z`` shaped like the Q-net (γλ-decayed, Watkins
+    cut on non-greedy moves),
+  * a Welford observation normalizer updated inside the epoch body,
+  * one pending TD error ``delta`` between observe and update.
+
+``observe`` folds the transition into the traces immediately; ``update``
+applies the λ-return TD step with ObGD (overshoot-bounded stepsizes —
+the streaming paper's replacement for target-network stabilization).
+Sparse init (:func:`networks.sparse_init`) protects the single-sample
+updates from early interference.  The carry is a plain pytree of arrays,
+so the fleet stack — vmap/shard_map runners, heterogeneous EnvParams,
+lifecycle compaction, FleetCheckpoint — applies unchanged."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core import networks as nets
+from repro.core.dqn import apply_move
+from repro.core.exploration import EpsilonSchedule, epsilon_greedy
+from repro.core.streaming import (ObsNorm, norm_apply, norm_init,
+                                  norm_update, obgd_step, reward_norm_update,
+                                  trace_decay_add, trace_zeros_like)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamQConfig:
+    n_executors: int
+    n_machines: int
+    state_dim: int
+    gamma: float = 0.99
+    lam: float = 0.9             # eligibility-trace decay λ
+    lr: float = 1.0              # ObGD base stepsize α (self-throttling)
+    kappa: float = 3.0           # ObGD overshoot margin
+    # Much leaner than the replay agents' paper-faithful (64, 32) nets:
+    # trace-based single-sample TD(λ) holds reward parity with DQN on the
+    # paper workloads at (8, 8) (pinned in tests/test_streaming.py), and
+    # the lean net IS the fleet-width story — the per-lane carry drops
+    # ~66× vs the DQN lane (fleet_bench --streaming).  At fan-in 8 the
+    # paper's 0.9 zero fraction leaves 1-2 live weights per unit, so the
+    # sparse init backs off to 0.5.
+    sparsity: float = 0.5        # sparse-init zero fraction
+    hidden: tuple = (8, 8)
+    reward_scale: float = 0.25   # same affine rescale as the replay agents
+    # faster ε decay than the replay DQN (decay_epochs=800): traces give
+    # TD(λ) multi-step credit from the first transition, so exploitation
+    # can start earlier — validated by the pinned cq_small parity test
+    eps: EpsilonSchedule = EpsilonSchedule(decay_epochs=300)
+
+    @property
+    def num_actions(self) -> int:
+        return self.n_executors * self.n_machines
+
+
+class StreamQState(NamedTuple):
+    qnet: nets.MLPParams
+    z: nets.MLPParams            # eligibility traces, same pytree as qnet
+    norm: ObsNorm
+    delta: jnp.ndarray           # pending TD error (consumed by update)
+    epoch: jnp.ndarray
+    r_mean: jnp.ndarray = jnp.zeros(())
+    r_var: jnp.ndarray = jnp.ones(())
+    r_count: jnp.ndarray = jnp.zeros((), jnp.int32)
+
+
+def init_state(key: jax.Array, cfg: StreamQConfig) -> StreamQState:
+    q = nets.sparse_init(key, (cfg.state_dim, *cfg.hidden, cfg.num_actions),
+                         sparsity=cfg.sparsity)
+    return StreamQState(
+        qnet=q,
+        z=trace_zeros_like(q),
+        norm=norm_init(cfg.state_dim),
+        delta=jnp.zeros(()),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+def select_move(key, state: StreamQState, cfg: StreamQConfig, s_vec,
+                explore: bool = True):
+    """ε-greedy move over normalized observations.
+
+    Returns ``(move, greedy)`` — the greedy flag feeds the Watkins trace
+    cut in :func:`observe`: an exploratory move that happens to coincide
+    with argmax Q still counts as greedy."""
+    x = norm_apply(state.norm, s_vec)
+    q = nets.apply_qnet(state.qnet, x)
+    eps = cfg.eps(state.epoch) if explore else jnp.zeros(())
+    move = epsilon_greedy(key, q, eps)
+    greedy = (move == jnp.argmax(q)).astype(jnp.float32)
+    return move, greedy
+
+
+def observe(cfg: StreamQConfig, state: StreamQState, s_vec, aux, reward,
+            s_next) -> StreamQState:
+    """Fold one transition into the traces; stash the TD error.
+
+    Both endpoints are normalized under the statistics ``select`` saw, and
+    only afterwards is ``s_vec`` folded into the Welford stats — one fold
+    per observation over the lifetime (``s_next`` is next epoch's
+    ``s_vec``)."""
+    move, greedy = aux
+    r_std, r_mean, r_var, r_count = reward_norm_update(
+        reward, state.r_mean, state.r_var, state.r_count,
+        scale=cfg.reward_scale)
+    x = norm_apply(state.norm, s_vec)
+    x_next = norm_apply(state.norm, s_next)
+    q_next = nets.apply_qnet(state.qnet, x_next).max()
+    q_sa, grad = jax.value_and_grad(
+        lambda p: nets.apply_qnet(p, x)[move])(state.qnet)
+    delta = r_std + cfg.gamma * q_next - q_sa
+    # Watkins Q(λ): a non-greedy move cuts the trace before accumulation
+    z = trace_decay_add(state.z, grad, cfg.gamma * cfg.lam * greedy)
+    return state._replace(
+        z=z, delta=delta, norm=norm_update(state.norm, s_vec),
+        r_mean=r_mean, r_var=r_var, r_count=r_count)
+
+
+def update(state: StreamQState, cfg: StreamQConfig) -> StreamQState:
+    """Apply the pending ObGD TD step, then consume it — with δ = 0 the
+    step is an exact no-op, so ``updates_per_epoch > 1`` in the fused
+    epoch body applies each transition exactly once."""
+    qnet = obgd_step(state.qnet, state.z, state.delta, cfg.lr, cfg.kappa)
+    return state._replace(qnet=qnet, delta=jnp.zeros(()))
+
+
+def tick(state: StreamQState) -> StreamQState:
+    return state._replace(epoch=state.epoch + 1)
+
+
+# --------------------------------------------------------------------------
+# Agent-interface adapter — hooks for the generic api.make_epoch_step.
+# --------------------------------------------------------------------------
+def _agent_init(key, cfg: StreamQConfig, env_params=None):
+    return init_state(key, cfg)
+
+
+def _agent_select(key, cfg: StreamQConfig, state, s_vec, env_state,
+                  env_params, explore):
+    move, greedy = select_move(key, state, cfg, s_vec, explore=explore)
+    return apply_move(env_state.X, move, cfg.n_machines), (move, greedy)
+
+
+def _agent_observe(cfg: StreamQConfig, state, s_vec, aux, reward, s_next):
+    return observe(cfg, state, s_vec, aux, reward, s_next)
+
+
+def _agent_update(key, cfg: StreamQConfig, state):
+    return update(state, cfg)
+
+
+def _agent_tick(cfg: StreamQConfig, state):
+    return tick(state)
+
+
+def as_agent(cfg: StreamQConfig) -> api.Agent:
+    """Stream Q(λ) as a pluggable Agent bundle."""
+    return api.Agent(name="stream_q", cfg=cfg, init_fn=_agent_init,
+                     select_fn=_agent_select, observe_fn=_agent_observe,
+                     update_fn=_agent_update, tick_fn=_agent_tick)
+
+
+def agent_factory(env, **overrides) -> api.Agent:
+    """Registry hook: size a StreamQConfig for ``env`` (or pass ``cfg=``)."""
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        cfg = StreamQConfig(n_executors=env.N, n_machines=env.M,
+                            state_dim=env.state_dim, **overrides)
+    return as_agent(cfg)
+
+
+api.register_agent("stream_q", agent_factory)
+
+
+def init_fleet(key: jax.Array, cfg: StreamQConfig, fleet: int) -> StreamQState:
+    """Independently-initialized per-lane states stacked on [fleet]."""
+    return jax.vmap(lambda k: init_state(k, cfg))(jax.random.split(key, fleet))

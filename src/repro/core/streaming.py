@@ -1,0 +1,110 @@
+"""Shared machinery for the replay-free streaming agents (arXiv 2410.14606).
+
+Stream Q(λ) / Stream AC(λ) replace the replay buffer + target network +
+Adam state of the DQN/DDPG lanes with three small pieces, all of which
+live in the scan carry and are implemented here:
+
+  * :class:`ObsNorm` — a running Welford mean/variance observation
+    normalizer, updated once per transition *inside* the fused epoch body
+    (no host round-trips, no warm-up pass);
+  * eligibility traces — a pytree shaped like the network parameters,
+    decayed by γλ and accumulated with the current transition's gradient
+    (:func:`trace_decay_add`), which is what makes one-transition TD(λ)
+    updates carry multi-step credit without storing transitions;
+  * ObGD (:func:`obgd_step`) — overshoot-bounded gradient descent, the
+    stepsize rule that keeps single-sample updates stable without Adam:
+    the effective stepsize is throttled so one update cannot overshoot
+    the TD target, which also keeps every carry leaf finite for the
+    chunk-boundary ``maybe_check_finite`` sweeps.
+
+Reward standardization (:func:`reward_norm_update`) mirrors the running
+r_mean/r_var scheme the replay agents keep in DDPGState/DQNState — it is
+already a streaming statistic, so the streaming lanes reuse it verbatim.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ObsNorm(NamedTuple):
+    """Welford running mean/variance over observation vectors."""
+
+    mean: jnp.ndarray    # [dim]
+    m2: jnp.ndarray      # [dim] sum of squared deviations
+    count: jnp.ndarray   # scalar float32
+
+
+def norm_init(dim: int) -> ObsNorm:
+    return ObsNorm(mean=jnp.zeros((dim,), jnp.float32),
+                   m2=jnp.zeros((dim,), jnp.float32),
+                   count=jnp.zeros((), jnp.float32))
+
+
+def norm_update(norm: ObsNorm, x: jnp.ndarray) -> ObsNorm:
+    """Fold one observation into the running statistics (Welford)."""
+    count = norm.count + 1.0
+    delta = x - norm.mean
+    mean = norm.mean + delta / count
+    m2 = norm.m2 + delta * (x - mean)
+    return ObsNorm(mean=mean, m2=m2, count=count)
+
+
+def norm_apply(norm: ObsNorm, x: jnp.ndarray) -> jnp.ndarray:
+    """Standardize ``x`` under the current statistics (clipped ±10).
+
+    Until two observations have been folded in the variance estimate is
+    degenerate; fall back to unit variance so the first decision epochs
+    see finite, merely-centered inputs."""
+    var = jnp.where(norm.count > 1.0,
+                    norm.m2 / jnp.maximum(norm.count, 1.0),
+                    jnp.ones_like(norm.m2))
+    return jnp.clip((x - norm.mean) / jnp.sqrt(var + 1e-8), -10.0, 10.0)
+
+
+def reward_norm_update(r, mean, var, count, scale: float = 1.0):
+    """Running reward standardization (same scheme as ddpg/dqn ``store``).
+
+    Returns ``(r_std, mean, var, count)`` — the standardized reward plus
+    the advanced statistics to put back in the carry."""
+    r = r * scale
+    cnt = count + 1
+    alpha = jnp.maximum(0.02, 1.0 / cnt.astype(jnp.float32))
+    new_mean = mean + alpha * (r - mean)
+    new_var = (1 - alpha) * var + alpha * jnp.square(r - new_mean)
+    r_std = jnp.clip((r - new_mean) / jnp.maximum(jnp.sqrt(new_var), 1e-4),
+                     -10.0, 10.0)
+    return r_std, new_mean, new_var, cnt
+
+
+def trace_decay_add(traces, grads, decay):
+    """z ← decay·z + g, leafwise.  ``decay`` is a traced scalar — γλ, or
+    γλ·1{greedy} for the Watkins cut in Stream Q(λ)."""
+    return jax.tree.map(lambda z, g: decay * z + g, traces, grads)
+
+
+def trace_zeros_like(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def obgd_step(params, traces, delta, lr: float, kappa: float):
+    """Overshoot-bounded gradient descent (arXiv 2410.14606, Algorithm 3).
+
+    One TD update ``w ← w + α_eff·δ·z`` where the effective stepsize is
+    bounded so the update cannot cross the TD target:
+
+        δ̄    = max(|δ|, 1)
+        M    = α·κ·δ̄·‖z‖₁
+        α_eff = α / max(M, 1)
+
+    ``κ > 1`` leaves safety margin.  δ = 0 (a consumed pending update)
+    makes this an exact no-op, so calling it more than once per
+    transition — e.g. ``updates_per_epoch > 1`` in the fused epoch body —
+    applies the TD step exactly once."""
+    z_l1 = sum(jnp.abs(z).sum() for z in jax.tree_util.tree_leaves(traces))
+    delta_bar = jnp.maximum(jnp.abs(delta), 1.0)
+    bound = lr * kappa * delta_bar * z_l1
+    step = lr / jnp.maximum(bound, 1.0)
+    return jax.tree.map(lambda p, z: p + step * delta * z, params, traces)

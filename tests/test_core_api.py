@@ -14,8 +14,8 @@ import numpy as np
 import pytest
 
 import repro.core.agent as agent_mod
-from repro.core import (DDPGConfig, DQNConfig, agent_names, ddpg_init,
-                        make_agent, run_online_agent,
+from repro.core import (DDPGConfig, DQNConfig, agent_families, agent_names,
+                        ddpg_init, make_agent, run_online_agent,
                         run_online_ddpg_python,
                         run_online_dqn_python, run_online_fleet)
 from repro.core import ddpg, dqn
@@ -328,7 +328,7 @@ def test_named_scenarios_build_and_differ(small_env):
 # Registry: every agent runs end-to-end through the same fleet runner
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("name", ["ddpg", "dqn", "round_robin",
-                                  "model_based"])
+                                  "model_based", "stream_q", "stream_ac"])
 def test_registry_agent_runs_five_epochs(small_env, name):
     env = small_env
     overrides = {"model_based": {"fit_samples": 40},
@@ -345,10 +345,46 @@ def test_registry_agent_runs_five_epochs(small_env, name):
 
 def test_registry_lists_builtins_and_rejects_unknown(small_env):
     names = agent_names()
-    for expected in ("ddpg", "dqn", "round_robin", "model_based"):
+    for expected in ("ddpg", "dqn", "round_robin", "model_based",
+                     "stream_q", "stream_ac"):
         assert expected in names
     with pytest.raises(KeyError):
         make_agent("nope", small_env)
+
+
+def test_registry_completeness_on_both_env_families(small_env):
+    """EVERY registered name round-trips make_agent → init_fleet → one
+    fused epoch step on each env family it declares — a future agent
+    that breaks the fleet contract (or forgets to declare its family)
+    fails here, not in a launcher.  Family declarations themselves are
+    pinned: the learning/baseline agents run on both the DSDPS scheduling
+    env and the TPU placement instantiation, model_based only speaks the
+    queueing model, and the serving-only action-space policies declare
+    no steppable family at all."""
+    placement_env = ExpertPlacementEnv(
+        num_experts=6, num_devices=3, flops_per_token=1e9,
+        bytes_per_token=1024, tokens_per_step=4096)
+    envs = {"scheduling": small_env, "placement": placement_env}
+    overrides = {"model_based": {"fit_samples": 40}, "ddpg": {"k_nn": 4}}
+    for name in agent_names():
+        fams = agent_families(name)
+        assert set(fams) <= set(envs), (name, fams)
+        for fam in fams:
+            env = envs[fam]
+            agent = make_agent(name, env, **overrides.get(name, {}))
+            F = 2
+            states = agent.init_fleet(jax.random.PRNGKey(0), F)
+            keys = jax.random.split(jax.random.PRNGKey(1), F)
+            _, hist = run_online_fleet(keys, env, agent, states, T=1)
+            assert hist.rewards.shape == (F, 1), (name, fam)
+            assert np.isfinite(np.asarray(hist.rewards)).all(), (name, fam)
+    for name in ("ddpg", "dqn", "round_robin", "stream_q", "stream_ac"):
+        assert set(agent_families(name)) == {"scheduling", "placement"}
+    assert agent_families("model_based") == ("scheduling",)
+    assert agent_families("rate_control") == ()
+    assert agent_families("auto_tune") == ()
+    with pytest.raises(KeyError):
+        agent_families("nope")
 
 
 def test_agents_with_equal_configs_are_equal(small_env, ddpg_cfg):

@@ -40,6 +40,7 @@ EXECUTABLE_DOCS = (
     "docs/elastic_fleets.md",
     "docs/serving.md",
     "docs/sharded_fleets.md#multi-host-fleets",
+    "docs/streaming_agents.md",
 )
 
 
