@@ -10,6 +10,11 @@ lane-epochs/sec next to the single-device vmap row.  ``--lifecycle`` times
 the elastic lane lifecycle (repro/fleet/lifecycle.py) against the fixed
 grid on a plateauing fleet: total lane-epochs executed, the savings
 fraction, elastic-vs-fixed lane-epochs/sec, and the final-reward gap.
+``--graph`` runs the structural (DAG-shape) fleet: graph_policy vs ddpg
+on the same ``dag_shapes`` scenario lanes — different topologies padded
+into one envelope and trained as ONE program (compile-once asserted
+under the diagnostics guards; per-topology tail-latency parity >= 0.95
+asserted in full runs).
 
 The paper's credibility hinges on seed-swept online-learning curves; this
 bench shows why that is now affordable — one vmapped scan executes the
@@ -391,6 +396,117 @@ def run_streaming(fleet: int = 4, epochs: int = 300,
 
 
 # --------------------------------------------------------------------------
+# structural (DAG-shape) fleets: graph_policy vs ddpg across topologies
+# --------------------------------------------------------------------------
+def run_graph(fleet: int = 6, epochs: int = 300,
+              smoke: bool = False) -> list[tuple]:
+    """The Decima-style structural story: ONE fleet trains across
+    *different DAGs* (chain / diamond / wide fan-out padded into a common
+    envelope, ``scenarios.dag_shapes``) in a single XLA program, and the
+    graph policy's message passing is compared against the flat-vector
+    ddpg baseline on the SAME lanes.
+
+    Two contracts are asserted here (they are what the CI graph smoke
+    lane pins):
+
+    * compile-once — despite three heterogeneous graph structures, the
+      fleet program compiles exactly once (structure rides as traced
+      GraphEnvParams leaves, checked under repro.diagnostics.guards);
+    * parity (full runs only) — per-topology BEST-lane tail latency of
+      the graph fleet within 0.95x of ddpg's on the same scenarios (the
+      fleet is a parallel seed sweep; the deployed policy is the best
+      lane, drl_control's reporting convention)."""
+    from repro.core import agent as agent_mod
+    from repro.diagnostics import guards
+    from repro.dsdps.structural import StructuralSchedulingEnv
+
+    env = StructuralSchedulingEnv(apps.structural_topologies())
+    n_topos = len(env.topologies)
+    env_params = scenarios.build_for(env, "dag_shapes", fleet)
+    keys = jax.random.split(jax.random.PRNGKey(1), fleet)
+    k = max(1, min(20, epochs // 4))
+    results = {}
+    compiles = None
+    for name in ("graph_policy", "ddpg", "round_robin"):
+        agent = make_agent(name, env)
+        states = agent.init_fleet(jax.random.PRNGKey(0), fleet,
+                                  env_params=env_params, env=env)
+        if name == "graph_policy":
+            # cold + warm run under the tracing-discipline guards: the
+            # heterogeneous-DAG fleet must compile exactly once
+            with guards(track=(agent_mod._fleet_program,),
+                        label="fleet_bench_graph") as g:
+                t0 = time.perf_counter()
+                run_online_fleet(keys, env, agent, states, T=epochs,
+                                 env_params=env_params)
+                dt_cold = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                _, hist = run_online_fleet(keys, env, agent, states, T=epochs,
+                                           env_params=env_params)
+                dt = time.perf_counter() - t0
+                compiles = g.counter.compiles
+            if compiles != 1:
+                raise SystemExit(
+                    f"--graph: structural fleet compiled {compiles}x across "
+                    f"two runs over {n_topos} DAG shapes (want exactly 1 — "
+                    f"topology structure must ride as traced params, not "
+                    f"static shapes)")
+        else:
+            run_online_fleet(keys, env, agent, states, T=epochs,
+                             env_params=env_params)           # compile
+            t0 = time.perf_counter()
+            _, hist = run_online_fleet(keys, env, agent, states, T=epochs,
+                                       env_params=env_params)
+            dt = time.perf_counter() - t0
+        results[name] = {
+            "eps": fleet * epochs / dt,
+            "tails": np.asarray(hist.latencies)[:, -k:].mean(axis=1),
+        }
+    g_res, d_res = results["graph_policy"], results["ddpg"]
+    env_d = env.envelope
+    rows = [(f"fleet_bench_graph_dag_shapes_f{fleet}_T{epochs}",
+             1e6 / g_res["eps"],
+             f"lane_epochs_per_sec={g_res['eps']:.1f};"
+             f"ddpg_lane_epochs_per_sec={d_res['eps']:.1f};"
+             f"fleet_program_compiles={compiles};"
+             f"n_topologies={n_topos};"
+             f"envelope=execs{env_d.max_execs}_edges{env_d.max_edges}"
+             f"_spouts{env_d.max_spouts}_comps{env_d.max_components}"
+             + (f";cold_s={dt_cold:.2f}" if not smoke else ""),
+             provenance(agent="graph_policy"))]
+    # per-topology parity: lane i runs topology i % n_topos, so grouping
+    # lanes by residue compares the two agents on identical scenario sets.
+    # The asserted number is BEST-lane parity — the fleet is a parallel
+    # seed sweep and the deployed policy is the best lane (drl_control's
+    # reporting convention); lane means ride along for transparency.
+    per_topo, lanes = [], np.arange(fleet)
+    for t, topo in enumerate(env.topologies):
+        sel = lanes % n_topos == t
+        g_best = float(g_res["tails"][sel].min())
+        parity = float(d_res["tails"][sel].min()) / max(g_best, 1e-9)
+        parity_mean = (float(d_res["tails"][sel].mean())
+                       / max(float(g_res["tails"][sel].mean()), 1e-9))
+        rr_lat = float(results["round_robin"]["tails"][sel].mean())
+        per_topo.append((topo.name, parity, parity_mean, g_best, rr_lat))
+    parity_min = min(p for _, p, _, _, _ in per_topo)
+    rows.append((f"fleet_bench_graph_parity_f{fleet}_T{epochs}",
+                 0.0,
+                 f"parity_min_vs_ddpg={parity_min:.3f};" +
+                 ";".join(f"{n}_best_parity={p:.3f};"
+                          f"{n}_mean_parity={pm:.3f};"
+                          f"{n}_best_tail_ms={gl:.3f};"
+                          f"{n}_round_robin_ms={rl:.3f}"
+                          for n, p, pm, gl, rl in per_topo),
+                 provenance(agent="graph_policy")))
+    if not smoke and parity_min < 0.95:
+        raise SystemExit(
+            f"--graph: per-topology best-lane tail-latency parity vs ddpg "
+            f"fell to {parity_min:.3f} (< 0.95): "
+            f"{[(n, round(p, 3)) for n, p, _, _, _ in per_topo]}")
+    return rows
+
+
+# --------------------------------------------------------------------------
 # multi-host scaling: N localhost processes, one process-spanning mesh
 # --------------------------------------------------------------------------
 def run_multihost_worker(fleet: int, epochs: int, app: str,
@@ -531,6 +647,20 @@ def main() -> None:
     ap.add_argument("--streaming-fleet", type=int, default=4,
                     help="fleet width of the --streaming comparison runs "
                          "(memory rows are per-lane, so small is fine)")
+    ap.add_argument("--graph", action="store_true",
+                    help="also run the structural (DAG-shape) fleet: "
+                         "graph_policy vs ddpg on the same dag_shapes "
+                         "scenario lanes (chain/diamond/wide-fanout padded "
+                         "into one envelope), asserting the heterogeneous-"
+                         "DAG fleet compiles exactly once and — in full "
+                         "runs — per-topology tail-latency parity >= 0.95; "
+                         "with --smoke this runs ONLY the small graph lane "
+                         "(the CI graph smoke job)")
+    ap.add_argument("--graph-fleet", type=int, default=6,
+                    help="fleet width of the --graph comparison runs "
+                         "(lanes round-robin over the structural "
+                         "topologies, so a multiple of 3 covers them "
+                         "evenly)")
     ap.add_argument("--multihost", action="store_true",
                     help="also run the multi-host scaling sweep: launch "
                          "1/2/4 localhost worker processes joined into one "
@@ -539,7 +669,9 @@ def main() -> None:
                          "lane-epochs/sec + scaling per process count")
     ap.add_argument("--smoke", action="store_true",
                     help="shrink the --multihost sweep to 1/2 processes "
-                         "(the CI multihost-smoke job)")
+                         "(the CI multihost-smoke job); with --graph, run "
+                         "only a small structural lane (the CI graph "
+                         "smoke job)")
     ap.add_argument("--multihost-devices", type=int, default=2,
                     help="emulated CPU devices per worker process in the "
                          "--multihost sweep")
@@ -554,11 +686,16 @@ def main() -> None:
         run_multihost_worker(args.fleet, args.epochs, args.app,
                              args.worker_out)
         return
-    rows = run_all(args.fleet, args.epochs, args.app, args.baseline_epochs,
-                   args.scenario_batched, args.broadcast_invariant,
-                   args.sharded, args.lifecycle, args.guards)
-    if args.streaming:
+    graph_only = args.graph and args.smoke
+    rows = [] if graph_only else run_all(
+        args.fleet, args.epochs, args.app, args.baseline_epochs,
+        args.scenario_batched, args.broadcast_invariant,
+        args.sharded, args.lifecycle, args.guards)
+    if args.streaming and not graph_only:
         rows += run_streaming(args.streaming_fleet, args.epochs, args.app)
+    if args.graph:
+        rows += run_graph(3 if args.smoke else args.graph_fleet,
+                          8 if args.smoke else args.epochs, smoke=args.smoke)
     if args.multihost:
         rows += run_multihost(args.fleet, args.epochs, args.app,
                               smoke=args.smoke,

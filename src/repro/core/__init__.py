@@ -8,6 +8,9 @@ from repro.core.stream_q import (StreamQConfig, StreamQState,
                                  init_state as stream_q_init)
 from repro.core.stream_ac import (StreamACConfig, StreamACState,
                                   init_state as stream_ac_init)
+from repro.core.graph_policy import (GraphPolicyConfig, GraphPolicyState,
+                                     graph_param_specs,
+                                     init_state as graph_policy_init)
 from repro.core.agent import (History, reset_fleet_states, run_online_agent,
                               run_online_ddpg_python, run_online_dqn_python,
                               run_online_fleet)
@@ -32,6 +35,8 @@ __all__ = [
     "DQNConfig", "DQNState", "dqn_init",
     "StreamQConfig", "StreamQState", "stream_q_init",
     "StreamACConfig", "StreamACState", "stream_ac_init",
+    "GraphPolicyConfig", "GraphPolicyState", "graph_policy_init",
+    "graph_param_specs",
     "History", "reset_fleet_states", "run_online_agent", "run_online_fleet",
     "run_online_ddpg_python", "run_online_dqn_python",
     "knn_actions_exact", "knn_actions_jax", "knn_assignments_exact",

@@ -37,8 +37,8 @@ and learners run through the same one-XLA-program fleet path.
     states, hist = run_online_fleet(keys, env, agent, states, T=300)
 
 Built-in names: ``ddpg``, ``dqn``, ``stream_q``, ``stream_ac``,
-``round_robin``, ``model_based`` (plus the serving-only ``rate_control``
-and ``auto_tune`` action-space policies).
+``graph_policy``, ``round_robin``, ``model_based`` (plus the
+serving-only ``rate_control`` and ``auto_tune`` action-space policies).
 The runners take Agent bundles ONLY — the PR-2 window during which bare
 DDPG/DQN configs were coerced has closed; wrap a ready config with
 ``make_agent(name, env, cfg=cfg)``.  The full interface contract is
@@ -205,6 +205,7 @@ def _load_builtins() -> None:
     import repro.core.control_policies  # noqa: F401
     import repro.core.ddpg        # noqa: F401
     import repro.core.dqn         # noqa: F401
+    import repro.core.graph_policy  # noqa: F401
     import repro.core.model_based  # noqa: F401
     import repro.core.round_robin  # noqa: F401
     import repro.core.stream_ac   # noqa: F401

@@ -1,0 +1,336 @@
+"""Decima-style graph policy: message passing over the topology DAG.
+
+The replay agents flatten (X, w) into a fixed-width vector, so one
+trained policy is welded to one topology shape.  ``graph_policy``
+instead reads the *executor graph* — per-node features plus the edge
+index/weight arrays of the routing matrix R (Decima, "Learning
+Scheduling Algorithms for Data Processing Clusters") — through a small
+segment-sum message-passing network in ``models/nn.py`` param dicts,
+with a per-executor placement head: ``q[i, j]`` scores moving executor
+``i`` to machine ``j``, the same restricted move space as DQN/Stream Q.
+
+Mask discipline (what makes padding exact, not approximate):
+
+  * node embeddings are multiplied by ``node_mask`` after every layer,
+    so padded nodes carry exact zeros;
+  * padded edges target the sacrificial segment ``N`` (one past the last
+    slot) with zero weight — the segment-sum runs over ``N + 1`` segments
+    and the extra one is sliced away, so real-node aggregates are
+    bit-identical across padding envelopes;
+  * Q rows of padded nodes are ``-inf`` and the ε-greedy draw is a
+    categorical over *valid* moves only, so padded executors are never
+    acted on.
+
+Graphs arrive from either side of one code path: on a plain
+``SchedulingEnv`` the (single) graph is frozen into the hashable config
+as tuples (jit constants); on a ``StructuralSchedulingEnv`` fleet the
+graph rides the traced :class:`GraphEnvParams` leaves, so every lane may
+carry a *different* DAG through one compiled program.  Training is the
+replay-free Stream Q(λ) recipe (eligibility traces + ObGD + running
+reward normalization) — the carry is a plain param-dict pytree, so
+fleets, sharding, checkpointing, and compaction apply unchanged.
+
+``env_params`` is threaded to ``observe`` (which needs the graph for
+Q(s')) through ``aux`` — the Agent contract's observe hook does not
+receive params directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+from repro.core.dqn import apply_move
+from repro.core.exploration import EpsilonSchedule
+from repro.core.streaming import (obgd_step, reward_norm_update,
+                                  trace_decay_add, trace_zeros_like)
+from repro.dsdps.structural import GraphEnvParams
+from repro.models import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPolicyConfig:
+    """Hashable spec: sizes + (for plain envs) the static graph as tuples.
+
+    ``static_*`` fields are None on structural envs, where each lane's
+    graph arrives as traced GraphEnvParams leaves instead."""
+
+    n_executors: int             # padded envelope size N
+    n_machines: int
+    n_spouts: int                # padded spout count S
+    gamma: float = 0.99
+    lam: float = 0.9             # eligibility-trace decay λ
+    lr: float = 1.0              # ObGD base stepsize
+    kappa: float = 3.0           # ObGD overshoot margin
+    hidden: int = 16             # node embedding width
+    msg_steps: int = 2           # message-passing rounds
+    reward_scale: float = 0.25
+    eps: EpsilonSchedule = EpsilonSchedule(decay_epochs=300)
+    static_spouts: tuple | None = None       # spout executor ids
+    static_edge_src: tuple | None = None     # R edge endpoints ...
+    static_edge_dst: tuple | None = None
+    static_edge_w: tuple | None = None       # ... and weights R[src, dst]
+
+    @property
+    def num_actions(self) -> int:
+        return self.n_executors * self.n_machines
+
+    @property
+    def n_features(self) -> int:
+        # X row + [service, bytes, out_mass, in_mass, spout_rate, is_spout,
+        # mask] — per-node widths only, so parameter shapes (and therefore
+        # init draws) are identical at every padding envelope.
+        return self.n_machines + 7
+
+
+class GraphPolicyState(NamedTuple):
+    qnet: dict                   # {"gnn": {enc, mp0.., head}} param dicts
+    z: dict                      # eligibility traces, same pytree
+    delta: jnp.ndarray           # pending TD error
+    epoch: jnp.ndarray
+    r_mean: jnp.ndarray = jnp.zeros(())
+    r_var: jnp.ndarray = jnp.ones(())
+    r_count: jnp.ndarray = jnp.zeros((), jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Graph plumbing: one (mask, spouts, edges) view over both param flavors.
+# --------------------------------------------------------------------------
+class _Graph(NamedTuple):
+    node_mask: jnp.ndarray       # [N]
+    spout_onehot: jnp.ndarray    # [S, N]
+    edge_src: jnp.ndarray        # [E] int32
+    edge_dst: jnp.ndarray        # [E] int32
+    edge_w: jnp.ndarray          # [E]
+
+
+def _graph_arrays(cfg: GraphPolicyConfig, env_params) -> _Graph:
+    """The graph the policy runs on: traced per-lane leaves on a
+    structural fleet, jit constants from the config on a plain env."""
+    if isinstance(env_params, GraphEnvParams):
+        return _Graph(env_params.node_mask, env_params.spout_onehot,
+                      env_params.edge_src, env_params.edge_dst,
+                      env_params.edge_w)
+    if cfg.static_edge_src is None:
+        raise ValueError(
+            "graph_policy built without a static graph needs GraphEnvParams "
+            "(StructuralSchedulingEnv) at select/observe time")
+    n = cfg.n_executors
+    sp = np.zeros((cfg.n_spouts, n), np.float32)
+    sp[np.arange(len(cfg.static_spouts)), list(cfg.static_spouts)] = 1.0
+    return _Graph(
+        node_mask=jnp.ones((n,), jnp.float32),
+        spout_onehot=jnp.asarray(sp),
+        edge_src=jnp.asarray(cfg.static_edge_src, jnp.int32),
+        edge_dst=jnp.asarray(cfg.static_edge_dst, jnp.int32),
+        edge_w=jnp.asarray(cfg.static_edge_w, jnp.float32),
+    )
+
+
+def _features(cfg: GraphPolicyConfig, s_vec, env_params,
+              graph: _Graph) -> jnp.ndarray:
+    """Per-node features [N, n_features] from the flat state vector (both
+    env families emit concat([X.reshape(-1), w_norm])) + params arrays."""
+    n, m = cfg.n_executors, cfg.n_machines
+    X = s_vec[: n * m].reshape(n, m)
+    w_norm = s_vec[n * m:]                          # [S], 0 on padded spouts
+    node_w = graph.spout_onehot.T @ w_norm          # [N]
+    is_spout = graph.spout_onehot.sum(0)
+    cols = [
+        X,
+        env_params.service_ms[:, None],
+        env_params.tuple_bytes[:, None] / 1024.0,
+        env_params.routing.sum(1)[:, None],         # selectivity × fan-out
+        env_params.routing.sum(0)[:, None],         # upstream mass
+        node_w[:, None],
+        is_spout[:, None],
+        graph.node_mask[:, None],
+    ]
+    return jnp.concatenate(cols, axis=1) * graph.node_mask[:, None]
+
+
+# --------------------------------------------------------------------------
+# The Q network: segment-sum message passing + per-executor placement head.
+# --------------------------------------------------------------------------
+def init_qnet(key: jax.Array, cfg: GraphPolicyConfig) -> dict:
+    h = cfg.hidden
+    keys = jax.random.split(key, 2 + 3 * cfg.msg_steps)
+    gnn = {"enc": nn.linear_init(keys[0], cfg.n_features, h,
+                                 dtype=jnp.float32)}
+    for t in range(cfg.msg_steps):
+        k_s, k_f, k_b = jax.random.split(keys[1 + t], 3)
+        gnn[f"mp{t}"] = {
+            "self": nn.linear_init(k_s, h, h, dtype=jnp.float32),
+            "fwd": nn.linear_init(k_f, h, h, dtype=jnp.float32),
+            "bwd": nn.linear_init(k_b, h, h, dtype=jnp.float32),
+        }
+    gnn["head"] = nn.linear_init(keys[-1], 2 * h + cfg.n_machines,
+                                 cfg.n_machines, bias=True, dtype=jnp.float32)
+    return {"gnn": gnn}
+
+
+def apply_qnet(params: dict, feat: jnp.ndarray, graph: _Graph,
+               cfg: GraphPolicyConfig) -> jnp.ndarray:
+    """Raw per-move scores q[i, j] (unmasked).  Padded nodes stay exact
+    zeros through every layer; padded edges deposit into the sacrificial
+    segment ``n`` which the ``[:n]`` slice discards."""
+    g = params["gnn"]
+    mask = graph.node_mask[:, None]
+    n = feat.shape[0]
+    h = jax.nn.relu(nn.linear(g["enc"], feat)) * mask
+    for t in range(cfg.msg_steps):
+        mp = g[f"mp{t}"]
+        # out-of-range (sacrificial) gather indices clamp; their messages
+        # carry zero edge weight and only ever land in the dropped segment
+        fwd = jax.ops.segment_sum(graph.edge_w[:, None] * h[graph.edge_src],
+                                  graph.edge_dst, num_segments=n + 1)[:n]
+        bwd = jax.ops.segment_sum(graph.edge_w[:, None] * h[graph.edge_dst],
+                                  graph.edge_src, num_segments=n + 1)[:n]
+        h = jax.nn.relu(nn.linear(mp["self"], h) + nn.linear(mp["fwd"], fwd)
+                        + nn.linear(mp["bwd"], bwd)) * mask
+    n_real = jnp.maximum(graph.node_mask.sum(), 1.0)
+    pooled = h.sum(0) / n_real                                    # [H]
+    # machine occupancy straight off the assignment columns of the (already
+    # masked) features: the placement head sees which machines are loaded
+    # without waiting on message passing to carry it around the graph
+    occ = feat[:, : cfg.n_machines].sum(0) / n_real               # [M]
+    ctx = jnp.concatenate([pooled, occ])
+    hg = jnp.concatenate(
+        [h, jnp.broadcast_to(ctx[None, :], (h.shape[0], ctx.shape[0]))],
+        axis=-1)
+    return nn.linear(g["head"], hg)                               # [N, M]
+
+
+def _masked(q: jnp.ndarray, graph: _Graph) -> jnp.ndarray:
+    return jnp.where(graph.node_mask[:, None] > 0.5, q, -jnp.inf)
+
+
+# --------------------------------------------------------------------------
+# Agent-interface adapter (Stream Q(λ) training recipe).
+# --------------------------------------------------------------------------
+def init_state(key: jax.Array, cfg: GraphPolicyConfig) -> GraphPolicyState:
+    q = init_qnet(key, cfg)
+    return GraphPolicyState(
+        qnet=q,
+        z=trace_zeros_like(q),
+        delta=jnp.zeros(()),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+def _agent_init(key, cfg: GraphPolicyConfig, env_params=None):
+    return init_state(key, cfg)
+
+
+def _agent_select(key, cfg: GraphPolicyConfig, state, s_vec, env_state,
+                  env_params, explore):
+    graph = _graph_arrays(cfg, env_params)
+    feat = _features(cfg, s_vec, env_params, graph)
+    flat = _masked(apply_qnet(state.qnet, feat, graph, cfg), graph).reshape(-1)
+    greedy_move = jnp.argmax(flat)
+    if explore:
+        k_bern, k_rand = jax.random.split(key)
+        eps = cfg.eps(state.epoch)
+        # masked ε-greedy: uniform over VALID moves only — the stock
+        # epsilon_greedy samples the full padded grid
+        rand_move = jax.random.categorical(
+            k_rand, jnp.where(jnp.isfinite(flat), 0.0, -jnp.inf))
+        move = jnp.where(jax.random.bernoulli(k_bern, eps), rand_move,
+                         greedy_move)
+    else:
+        move = greedy_move
+    greedy = (move == greedy_move).astype(jnp.float32)
+    n, m = cfg.n_executors, cfg.n_machines
+    X = s_vec[: n * m].reshape(n, m)
+    action = apply_move(X, move, m)
+    # aux smuggles env_params to observe (the contract's observe hook is
+    # params-free); it lives only within the epoch body, not the carry
+    return action, (move, greedy, env_params)
+
+
+def _agent_observe(cfg: GraphPolicyConfig, state, s_vec, aux, reward, s_next):
+    move, greedy, env_params = aux
+    graph = _graph_arrays(cfg, env_params)
+    r_std, r_mean, r_var, r_count = reward_norm_update(
+        reward, state.r_mean, state.r_var, state.r_count,
+        scale=cfg.reward_scale)
+    feat = _features(cfg, s_vec, env_params, graph)
+    feat_next = _features(cfg, s_next, env_params, graph)
+    q_next = _masked(apply_qnet(state.qnet, feat_next, graph, cfg),
+                     graph).max()
+    q_sa, grad = jax.value_and_grad(
+        lambda p: apply_qnet(p, feat, graph, cfg).reshape(-1)[move])(
+            state.qnet)
+    delta = r_std + cfg.gamma * q_next - q_sa
+    # Watkins Q(λ): non-greedy moves cut the trace before accumulation
+    z = trace_decay_add(state.z, grad, cfg.gamma * cfg.lam * greedy)
+    return state._replace(z=z, delta=delta, r_mean=r_mean, r_var=r_var,
+                          r_count=r_count)
+
+
+def _agent_update(key, cfg: GraphPolicyConfig, state):
+    qnet = obgd_step(state.qnet, state.z, state.delta, cfg.lr, cfg.kappa)
+    return state._replace(qnet=qnet, delta=jnp.zeros(()))
+
+
+def _agent_tick(cfg: GraphPolicyConfig, state):
+    return state._replace(epoch=state.epoch + 1)
+
+
+def as_agent(cfg: GraphPolicyConfig) -> api.Agent:
+    """The graph policy as a pluggable Agent bundle."""
+    return api.Agent(name="graph_policy", cfg=cfg, init_fn=_agent_init,
+                     select_fn=_agent_select, observe_fn=_agent_observe,
+                     update_fn=_agent_update, tick_fn=_agent_tick)
+
+
+def agent_factory(env, **overrides) -> api.Agent:
+    """Registry hook: a structural env contributes its padding envelope;
+    a plain SchedulingEnv freezes its (single) graph into the config."""
+    cfg = overrides.pop("cfg", None)
+    if cfg is None:
+        if hasattr(env, "envelope"):           # StructuralSchedulingEnv
+            cfg = GraphPolicyConfig(
+                n_executors=env.N, n_machines=env.M,
+                n_spouts=env.envelope.max_spouts, **overrides)
+        elif hasattr(env, "topo"):             # plain SchedulingEnv
+            topo = env.topo
+            n_edges = int(np.count_nonzero(topo.routing_matrix(env.seed)))
+            gobs = topo.to_graph_obs(topo.num_executors, n_edges,
+                                     seed=env.seed)
+            cfg = GraphPolicyConfig(
+                n_executors=env.N, n_machines=env.M,
+                n_spouts=env.workload.num_spouts,
+                static_spouts=tuple(int(i) for i in topo.spout_executors),
+                static_edge_src=tuple(int(i) for i in gobs.edge_src),
+                static_edge_dst=tuple(int(i) for i in gobs.edge_dst),
+                static_edge_w=tuple(float(x) for x in gobs.edge_w),
+                **overrides)
+        else:
+            raise TypeError(
+                "graph_policy needs a topology-bearing env (SchedulingEnv "
+                "or StructuralSchedulingEnv); got "
+                f"{type(env).__name__}")
+    return as_agent(cfg)
+
+
+api.register_agent("graph_policy", agent_factory, families=("scheduling",))
+
+
+def init_fleet(key: jax.Array, cfg: GraphPolicyConfig,
+               fleet: int) -> GraphPolicyState:
+    """Independently-initialized per-lane states stacked on [fleet]."""
+    return jax.vmap(lambda k: init_state(k, cfg))(jax.random.split(key, fleet))
+
+
+def graph_param_specs(params, mesh):
+    """PartitionSpecs for a graph-policy param pytree under the repo's
+    name-rule sharding policy — GNN layer matrices land on the mesh's
+    "model" axis (``fsdp=False``: the data axes carry fleet lanes, not
+    parameter shards).  See sharding/policy.py's ``gnn/`` rule."""
+    from repro.sharding.policy import ShardingPolicy
+    return ShardingPolicy(mesh, None, fsdp=False).params_tree(params)

@@ -1,4 +1,4 @@
-from repro.dsdps.topology import Component, Edge, Topology
+from repro.dsdps.topology import Component, Edge, GraphObs, Topology
 from repro.dsdps.cluster import ClusterSpec, PAPER_CLUSTER
 from repro.dsdps.simulator import (EnvParams, SimParams,
                                    average_tuple_time_from_params,
@@ -11,11 +11,16 @@ from repro.dsdps.simulator import (EnvParams, SimParams,
                                    with_straggler)
 from repro.dsdps.workload import WorkloadProcess, step_rates
 from repro.dsdps.env import EnvState, SchedulingEnv, StepOut
+from repro.dsdps.structural import (Envelope, GraphEnvParams,
+                                    StructuralSchedulingEnv, graph_latency_ms)
 from repro.dsdps import actions, apps, scenarios
 
 __all__ = [
     "actions",
-    "Component", "Edge", "Topology", "ClusterSpec", "PAPER_CLUSTER",
+    "Component", "Edge", "GraphObs", "Topology", "ClusterSpec",
+    "PAPER_CLUSTER",
+    "Envelope", "GraphEnvParams", "StructuralSchedulingEnv",
+    "graph_latency_ms",
     "SimParams", "EnvParams", "average_tuple_time_ms",
     "average_tuple_time_from_params", "build_sim_params", "to_env_params",
     "params_stacked", "params_in_axes", "lane_params",

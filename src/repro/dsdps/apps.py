@@ -87,6 +87,55 @@ def word_count() -> Topology:
     )
 
 
+def diamond(parallelism: int = 4) -> Topology:
+    """spout -> fork -> {left, right} -> merge — the canonical ack-join
+    diamond for the structural (DAG-shape) scenario fleets: two parallel
+    branches whose completion times max-join at the merge bolt."""
+    return Topology(
+        name="diamond",
+        components=[
+            Component("spout", 2, cpu_ms_per_tuple=0.03, selectivity=1.0,
+                      tuple_bytes=200, is_spout=True),
+            Component("fork", parallelism, cpu_ms_per_tuple=0.30,
+                      selectivity=2.0, tuple_bytes=260),
+            Component("left", parallelism, cpu_ms_per_tuple=0.55,
+                      selectivity=0.5, tuple_bytes=180),
+            Component("right", parallelism, cpu_ms_per_tuple=0.40,
+                      selectivity=0.5, tuple_bytes=220),
+            Component("merge", parallelism, cpu_ms_per_tuple=0.35,
+                      selectivity=0.0, tuple_bytes=64),
+        ],
+        edges=[
+            Edge("spout", "fork", SHUFFLE),
+            Edge("fork", "left", SHUFFLE),
+            Edge("fork", "right", FIELDS, skew=0.5),
+            Edge("left", "merge", SHUFFLE),
+            Edge("right", "merge", SHUFFLE),
+        ],
+    )
+
+
+def wide_fanout(branches: int = 4) -> Topology:
+    """spout -> router -> {b0..b(k-1)} -> collector — one router replicated
+    to ``branches`` parallel bolts (the wide-fan-out structural stress:
+    completion is the max over many sibling branches)."""
+    comps = [
+        Component("spout", 2, cpu_ms_per_tuple=0.03, selectivity=1.0,
+                  tuple_bytes=240, is_spout=True),
+        Component("router", 3, cpu_ms_per_tuple=0.20, selectivity=1.0,
+                  tuple_bytes=240),
+    ]
+    edges = [Edge("spout", "router", SHUFFLE)]
+    for b in range(branches):
+        comps.append(Component(f"b{b}", 2, cpu_ms_per_tuple=0.35 + 0.05 * b,
+                               selectivity=1.0 / branches, tuple_bytes=160))
+        edges.append(Edge("router", f"b{b}", SHUFFLE))
+        edges.append(Edge(f"b{b}", "collector", SHUFFLE))
+    comps.append(Component("collector", 3, cpu_ms_per_tuple=0.25,
+                           selectivity=0.0, tuple_bytes=64))
+    return Topology(name="wide_fanout", components=comps, edges=edges)
+
+
 # Spout arrival rates (tuples/sec per spout executor) for each app — chosen
 # so the cluster runs at moderate utilization under round-robin (the paper's
 # cluster was loaded but "not overloaded", §4.2).
@@ -97,6 +146,8 @@ def default_workload(topo: Topology) -> WorkloadProcess:
         "continuous_queries_large": 1100.0,
         "log_stream_processing": 130.0,
         "word_count": 550.0,
+        "diamond": 900.0,
+        "wide_fanout": 800.0,
     }[topo.name]
     n_spout = int(len(topo.spout_executors))
     return WorkloadProcess(base_rates=(per_spout,) * n_spout)
@@ -108,4 +159,16 @@ ALL_APPS = {
     "cq_large": lambda: continuous_queries("large"),
     "log_stream": log_stream_processing,
     "word_count": word_count,
+    "diamond": diamond,
+    "wide_fanout": wide_fanout,
 }
+
+
+# the default structural-fleet topology set: chain (cq_small), diamond,
+# wide fan-out — three DAG shapes padded into one envelope (see
+# repro.dsdps.structural and the `dag_shapes` scenario)
+STRUCTURAL_APPS = ("cq_small", "diamond", "wide_fanout")
+
+
+def structural_topologies() -> list[Topology]:
+    return [ALL_APPS[name]() for name in STRUCTURAL_APPS]

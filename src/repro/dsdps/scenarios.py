@@ -85,12 +85,34 @@ def mixed(env, fleet: int, seed: int = 0) -> list[EnvParams]:
     return lanes
 
 
+def dag_shapes(env, fleet: int):
+    """STRUCTURAL fleet: lane i runs topology ``i % len(env.topologies)``
+    padded into the env's common envelope — chain vs diamond vs wide
+    fan-out vs varying operator counts, different *graphs* in one XLA
+    program.  Requires a :class:`~repro.dsdps.structural.
+    StructuralSchedulingEnv`; a plain SchedulingEnv bakes its single
+    topology into jit-static structure and cannot vary it per lane."""
+    if not hasattr(env, "params_for"):
+        raise TypeError(
+            "scenario 'dag_shapes' varies topology structure per lane and "
+            "needs a StructuralSchedulingEnv (repro.dsdps.structural); "
+            f"{type(env).__name__} fixes one topology per program")
+    topos = env.topologies
+    return [env.params_for(topos[i % len(topos)]) for i in range(fleet)]
+
+
 SCENARIOS = {
     "uniform": uniform,
     "one_slow_machine": one_slow_machine,
     "diurnal_rate": diurnal_rate,
     "high_noise": high_noise,
     "mixed": mixed,
+}
+
+# structure-varying scenarios: only valid on envelope-padded structural
+# envs (scenario_names() lists them per env; build() checks)
+STRUCTURAL_SCENARIOS = {
+    "dag_shapes": dag_shapes,
 }
 
 
@@ -100,11 +122,16 @@ def build(name: str, env, fleet: int, broadcast_invariant: bool = False,
 
     ``broadcast_invariant=True`` leaves lane-identical leaves unstacked
     (single copy) for per-leaf in_axes=None broadcasting."""
-    try:
-        builder = SCENARIOS[name]
-    except KeyError:
-        raise KeyError(f"unknown scenario {name!r}; "
-                       f"known: {sorted(SCENARIOS)}") from None
+    if name in STRUCTURAL_SCENARIOS:
+        builder = STRUCTURAL_SCENARIOS[name]
+    else:
+        try:
+            builder = SCENARIOS[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown scenario {name!r}; known: "
+                f"{sorted(SCENARIOS) + sorted(STRUCTURAL_SCENARIOS)}"
+            ) from None
     return stack_env_params(builder(env, fleet, **kwargs),
                             broadcast_invariant=broadcast_invariant)
 
@@ -121,8 +148,18 @@ def build_for(env, name: str, fleet: int, broadcast_invariant: bool = False,
     """Scenario fleet for ANY functional env: dispatches DSDPS envs to the
     EnvParams builders above and ``ExpertPlacementEnv`` to the
     PlacementParams builders in ``repro.core.placement`` (lazy import —
-    no dsdps↔core import cycle)."""
-    if hasattr(env, "topo"):        # DSDPS scheduling env
+    no dsdps↔core import cycle).
+
+    The dispatch is ENVELOPE-aware, not width-aware: a DSDPS env's
+    ``state_vector`` width is whatever its (possibly padded) envelope
+    says, and the numeric builders operate leaf-wise on
+    ``default_params()`` — EnvParams and the padded GraphEnvParams alike.
+    Structure-varying scenarios (``dag_shapes``) additionally require the
+    env to *have* a padding envelope (``StructuralSchedulingEnv``); a
+    topology that does not fit its env's envelope raises a ``ValueError``
+    from ``params_for`` naming the offending dimension — never a
+    silently-truncated observation."""
+    if hasattr(env, "topo"):        # DSDPS scheduling env (plain or padded)
         return build(name, env, fleet,
                      broadcast_invariant=broadcast_invariant, **kwargs)
     from repro.core import placement
@@ -175,8 +212,12 @@ def perturb_sampler(env, base=None, **kwargs):
 
 
 def scenario_names(env) -> tuple[str, ...]:
-    """Names valid for ``build_for(env, ...)``."""
+    """Names valid for ``build_for(env, ...)`` — structural (DAG-shape)
+    scenarios are listed only for envs that carry a padding envelope."""
     if hasattr(env, "topo"):
-        return tuple(sorted(SCENARIOS))
+        names = sorted(SCENARIOS)
+        if hasattr(env, "params_for"):
+            names = sorted(names + sorted(STRUCTURAL_SCENARIOS))
+        return tuple(names)
     from repro.core import placement
     return tuple(sorted(placement.PLACEMENT_SCENARIOS))

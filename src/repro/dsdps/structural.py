@@ -1,0 +1,376 @@
+"""Structural scheduling fleets: many DAG *shapes* in one XLA program.
+
+``SchedulingEnv`` bakes its topology into jit-static structure
+(``SimParams``: reverse-topological schedules, component membership,
+spout index arrays), so every fleet lane must share one graph.  This
+module moves the structure into the traced params pytree instead:
+
+  * :class:`Envelope` — the common padded size (max executors / edges /
+    spouts / components) a set of topologies is embedded into;
+  * :class:`GraphEnvParams` — ``EnvParams`` plus masked structure leaves
+    (node mask, spout/component one-hots, edge index/weight arrays), so a
+    *stacked* fleet carries a different DAG per lane;
+  * :class:`StructuralSchedulingEnv` — the same functional env API as
+    ``SchedulingEnv`` (reset/step/state_vector/evaluate/reset_fleet) with
+    a padding-exact latency model: padded executors have zero service,
+    zero flow, zero mask, and are provably inert in every term.
+
+The completion-time recursion (reverse topo order in ``_latency_core``)
+is replaced by a fixed-depth dense relaxation over ``R @ comp_onehot`` —
+mathematically identical for DAGs (executors of one component share a
+downstream set; nodes of downstream-height ``h`` are exact after ``h``
+iterations, and height < max_components), but with no Python-level
+dependence on any single topology, so three different DAGs compile into
+ONE program."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dsdps import apps as _apps
+from repro.dsdps.cluster import ClusterSpec, PAPER_CLUSTER
+from repro.dsdps.env import EnvState, StepOut
+from repro.dsdps.simulator import (_congestion, build_sim_params,
+                                   params_in_axes)
+from repro.dsdps.topology import Topology
+from repro.dsdps.workload import NEVER_SHIFT, WorkloadProcess, step_rates
+
+
+@dataclasses.dataclass(frozen=True)
+class Envelope:
+    """Common padded sizes a set of topologies is embedded into."""
+
+    max_execs: int
+    max_edges: int
+    max_spouts: int
+    max_components: int
+
+    @classmethod
+    def for_topologies(cls, topos: Sequence[Topology], seed: int = 0,
+                       headroom: int = 0) -> "Envelope":
+        """Tight envelope over ``topos`` (optionally ``headroom`` extra
+        executor slots, for padding-invariance experiments)."""
+        execs = max(t.num_executors for t in topos)
+        edges = max(int(np.count_nonzero(t.routing_matrix(seed))) for t in topos)
+        spouts = max(len(t.spout_executors) for t in topos)
+        comps = max(len(t.components) for t in topos)
+        return cls(max_execs=execs + headroom, max_edges=edges + headroom,
+                   max_spouts=spouts, max_components=comps)
+
+
+class GraphEnvParams(NamedTuple):
+    """``EnvParams`` plus traced (per-lane) topology structure.
+
+    Field names/prefix match :class:`~repro.dsdps.simulator.EnvParams`, so
+    every ``_replace``-based scenario helper (``with_straggler``,
+    ``scale_rates``, ``perturb_service``, …) and the stack/axes/lane
+    machinery work unchanged.  Padded entries are zeros (index arrays use
+    the sacrificial index ``N``), which every consumer masks exactly."""
+
+    routing: jnp.ndarray             # [N, N] padded executor routing matrix
+    flow_solve: jnp.ndarray          # [N, N] (I - R^T)^-1, identity on padding
+    service_ms: jnp.ndarray          # [N] true CPU ms / tuple (0 on padding)
+    nominal_service_ms: jnp.ndarray  # [N]
+    tuple_bytes: jnp.ndarray         # [N]
+    acker_ms: jnp.ndarray            # scalar
+    speed: jnp.ndarray               # [M]
+    noise_sigma: jnp.ndarray         # scalar
+    base_rates: jnp.ndarray          # [S] padded with zeros
+    rate_jitter: jnp.ndarray         # scalar
+    rate_revert: jnp.ndarray         # scalar
+    shift_epoch: jnp.ndarray         # scalar int32
+    shift_factor: jnp.ndarray        # scalar
+    node_mask: jnp.ndarray           # [N] 1.0 on real executors
+    spout_onehot: jnp.ndarray        # [S, N] one-hot spout rows (0 on padding)
+    comp_onehot: jnp.ndarray         # [N, C] executor->component (0 on padding)
+    edge_src: jnp.ndarray            # [E] int32 (padding = N, sacrificial)
+    edge_dst: jnp.ndarray            # [E] int32 (padding = N, sacrificial)
+    edge_w: jnp.ndarray              # [E] R[src, dst] (0 on padding)
+    edge_mask: jnp.ndarray           # [E]
+
+
+def graph_latency_ms(X: jnp.ndarray, w: jnp.ndarray, gp: GraphEnvParams,
+                     cluster: ClusterSpec,
+                     speed: jnp.ndarray | None = None) -> jnp.ndarray:
+    """The ``_latency_core`` queueing model with all structure traced.
+
+    Identical math on the real sub-graph (padding contributes exactly
+    nothing: zero mask, zero service, zero flow), with the reverse-topo
+    completion recursion replaced by ``max_components`` dense relaxation
+    steps — see the module docstring."""
+    mask = gp.node_mask
+    X = X * mask[:, None]
+    speed = gp.speed if speed is None else speed
+    R = gp.routing
+    n = X.shape[0]
+
+    # 1. steady-state executor tuple rates (tuples/sec)
+    w_full = gp.spout_onehot.T @ w                                    # [N]
+    lam = gp.flow_solve @ w_full
+
+    same_mach = X @ X.T
+    same_proc = same_mach
+    edge_rate = lam[:, None] * R
+    cross_proc = edge_rate * (1.0 - same_proc)
+    cross_mach = edge_rate * (1.0 - same_mach)
+
+    # 2. machine CPU contention (padded executors: X row zero => no demand)
+    c_ms = gp.service_ms
+    ser_ms = cluster.ser_base_ms + gp.tuple_bytes * cluster.ser_ms_per_kb / 1024.0
+    base_demand = (X * (lam * c_ms / 1e3)[:, None]).sum(0)
+    ser_out = (X * (cross_proc.sum(1) * ser_ms / 1e3)[:, None]).sum(0)
+    ser_in = (X * ((cross_proc * ser_ms[:, None]).sum(0) / 1e3)[:, None]).sum(0)
+    n_procs = (X.sum(0) > 0).astype(jnp.float32)
+    proc_burn = n_procs * cluster.proc_overhead_cores
+    presence = jnp.clip(gp.comp_onehot.T @ X, 0.0, 1.0)               # [C, M]
+    n_comp = presence.sum(0)
+    mix = 1.0 + cluster.mix_penalty * jnp.maximum(n_comp - 1.0, 0.0)
+    demand = (base_demand + ser_out + ser_in) * mix / speed + proc_burn
+    g_m = _congestion(demand / cluster.cores_per_machine)             # [M]
+
+    # 3. per-executor sojourn (0 on padding: c_ms = 0)
+    inflate = X @ (g_m / speed)
+    s_eff = c_ms * inflate
+    sojourn = s_eff * _congestion(lam * s_eff / 1e3)                  # [N]
+
+    # 4. transfer delays with NIC contention
+    bytes_per_s = cross_mach * gp.tuple_bytes[:, None]
+    out_load = (X * bytes_per_s.sum(1)[:, None]).sum(0)
+    in_load = (X * bytes_per_s.sum(0)[:, None]).sum(0)
+    nic_cap = cluster.nic_bytes_per_ms * 1e3
+    nic_g = _congestion(jnp.maximum(out_load, in_load) / nic_cap)
+    nic_factor = 0.5 * (X @ nic_g)[:, None] + 0.5 * (X @ nic_g)[None, :]
+    wire_ms = gp.tuple_bytes[:, None] / cluster.nic_bytes_per_ms
+    ser_path = 2.0 * ser_ms[:, None]
+    d_edge = jnp.where(
+        same_proc > 0.5,
+        cluster.local_base_ms,
+        jnp.where(
+            same_mach > 0.5,
+            cluster.ipc_base_ms + ser_path,
+            cluster.net_base_ms + ser_path + wire_ms * nic_factor,
+        ),
+    )                                                                 # [N, N]
+
+    # 5. completion times: fixed-depth relaxation of the reverse-topo
+    # recursion.  mass[i, c] = outgoing routing mass of executor i into
+    # component c; a branch's expected hop is the mass-weighted mean, the
+    # downstream cost the max over branched-to components (ack joins).
+    mass = R @ gp.comp_onehot                                         # [N, C]
+    has = mass > 1e-9
+    any_down = has.any(axis=1)
+    mass_safe = jnp.maximum(mass, 1e-12)
+    completion = sojourn
+    depth = gp.comp_onehot.shape[1]
+    for _ in range(depth):
+        hop = d_edge + completion[None, :]                            # [N, N]
+        branch = ((R * hop) @ gp.comp_onehot) / mass_safe             # [N, C]
+        downstream = jnp.where(has, branch, -jnp.inf).max(axis=1)
+        downstream = jnp.where(any_down, downstream, 0.0)
+        completion = sojourn + downstream
+
+    w_safe = jnp.maximum(w, 0.0)
+    comp_sp = gp.spout_onehot @ completion                            # [S]
+    avg = (w_safe * comp_sp).sum() / jnp.maximum(w_safe.sum(), 1e-9)
+    return avg + gp.acker_ms
+
+
+def measured_graph_latency_ms(key: jax.Array, X: jnp.ndarray, w: jnp.ndarray,
+                              gp: GraphEnvParams, cluster: ClusterSpec,
+                              speed: jnp.ndarray | None = None,
+                              n_measurements: int = 5) -> jnp.ndarray:
+    """Mean of ``n_measurements`` lognormal-noised readings (same protocol
+    as ``measured_latency_from_params``)."""
+    base = graph_latency_ms(X, w, gp, cluster, speed=speed)
+    z = jax.random.normal(key, (n_measurements,)) * gp.noise_sigma
+    return (base * jnp.exp(z)).mean()
+
+
+@dataclasses.dataclass(eq=False)
+class StructuralSchedulingEnv:
+    """One padded envelope over several topologies; same functional env API
+    as ``SchedulingEnv`` (identity hash — valid jit static), but every
+    lane of a stacked :class:`GraphEnvParams` fleet may run a *different*
+    DAG shape through one XLA program."""
+
+    topologies: Sequence[Topology]
+    workloads: Sequence[WorkloadProcess] | None = None
+    envelope: Envelope | None = None
+    cluster: ClusterSpec = PAPER_CLUSTER
+    noise_sigma: float = 0.03
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.topologies = tuple(self.topologies)
+        if not self.topologies:
+            raise ValueError("StructuralSchedulingEnv needs >= 1 topology")
+        if self.workloads is None:
+            self.workloads = tuple(_apps.default_workload(t)
+                                   for t in self.topologies)
+        self.workloads = tuple(self.workloads)
+        if len(self.workloads) != len(self.topologies):
+            raise ValueError("workloads must align 1:1 with topologies")
+        if self.envelope is None:
+            self.envelope = Envelope.for_topologies(self.topologies,
+                                                    seed=self.seed)
+        self.N = self.envelope.max_execs
+        self.M = self.cluster.num_machines
+        # reference topology/workload: build_for dispatch + default params
+        self.topo = self.topologies[0]
+        base = self.workloads[0]
+        pad = self.envelope.max_spouts - len(base.base_rates)
+        self.workload = dataclasses.replace(
+            base, base_rates=tuple(base.base_rates) + (0.0,) * pad)
+        self._default_params: GraphEnvParams | None = None
+
+    # -- params ------------------------------------------------------------
+    def params_for(self, topo: Topology,
+                   workload: WorkloadProcess | None = None) -> GraphEnvParams:
+        """Pad one topology into this env's envelope as a GraphEnvParams
+        pytree.  Raises ``ValueError`` naming the topology and the
+        offending envelope dimension when it does not fit — structure must
+        never be silently truncated."""
+        env_ = self.envelope
+        gobs = topo.to_graph_obs(env_.max_execs, env_.max_edges,
+                                 seed=self.seed)  # raises on exec/edge overflow
+        n_spouts = len(topo.spout_executors)
+        n_comps = len(topo.components)
+        if n_spouts > env_.max_spouts or n_comps > env_.max_components:
+            raise ValueError(
+                f"topology {topo.name} exceeds graph envelope: "
+                f"{n_spouts} spouts / {n_comps} components vs "
+                f"max_spouts={env_.max_spouts} / "
+                f"max_components={env_.max_components}"
+            )
+        if workload is None:
+            for t, wl in zip(self.topologies, self.workloads):
+                if t is topo or t.name == topo.name:
+                    workload = wl
+                    break
+            else:
+                workload = _apps.default_workload(topo)
+        if len(workload.base_rates) != n_spouts:
+            raise ValueError(
+                f"workload has {len(workload.base_rates)} spout rates, "
+                f"topology {topo.name} has {n_spouts} spout executors")
+
+        sim = build_sim_params(topo, seed=self.seed)
+        n, nmax = topo.num_executors, env_.max_execs
+        routing = np.zeros((nmax, nmax))
+        routing[:n, :n] = sim.routing
+        flow = np.eye(nmax)
+        flow[:n, :n] = sim.flow_solve
+
+        def pad_vec(x, size):
+            out = np.zeros(size)
+            out[: len(x)] = x
+            return out
+
+        spout_onehot = np.zeros((env_.max_spouts, nmax))
+        spout_onehot[np.arange(n_spouts), sim.spout_ids] = 1.0
+        comp_onehot = np.zeros((nmax, env_.max_components))
+        comp_onehot[np.arange(n), sim.exec_component] = 1.0
+        shift = workload.shift_epoch if workload.shift_epoch is not None \
+            else NEVER_SHIFT
+        f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+        return GraphEnvParams(
+            routing=f32(routing),
+            flow_solve=f32(flow),
+            service_ms=f32(pad_vec(sim.service_ms, nmax)),
+            nominal_service_ms=f32(pad_vec(sim.nominal_service_ms, nmax)),
+            tuple_bytes=f32(pad_vec(sim.tuple_bytes, nmax)),
+            acker_ms=f32(sim.acker_ms),
+            speed=f32(self.cluster.speed_factors()),
+            noise_sigma=f32(self.noise_sigma),
+            base_rates=f32(pad_vec(workload.base_rates, env_.max_spouts)),
+            rate_jitter=f32(workload.jitter),
+            rate_revert=f32(workload.revert),
+            shift_epoch=jnp.asarray(shift, jnp.int32),
+            shift_factor=f32(workload.shift_factor),
+            node_mask=f32(gobs.node_mask),
+            spout_onehot=f32(spout_onehot),
+            comp_onehot=f32(comp_onehot),
+            edge_src=jnp.asarray(gobs.edge_src, jnp.int32),
+            edge_dst=jnp.asarray(gobs.edge_dst, jnp.int32),
+            edge_w=f32(gobs.edge_w),
+            edge_mask=f32(gobs.edge_mask),
+        )
+
+    def default_params(self) -> GraphEnvParams:
+        if self._default_params is None:
+            self._default_params = self.params_for(self.topologies[0],
+                                                   self.workloads[0])
+        return self._default_params
+
+    # -- helpers -----------------------------------------------------------
+    def round_robin_assignment(self) -> jnp.ndarray:
+        idx = np.arange(self.N) % self.M
+        return jnp.asarray(np.eye(self.M)[idx], dtype=jnp.float32)
+
+    def state_vector(self, s: EnvState,
+                     params: GraphEnvParams | None = None) -> jnp.ndarray:
+        p = self.default_params() if params is None else params
+        w_norm = s.w / (p.base_rates + 1e-9)   # exactly 0 on padded spouts
+        return jnp.concatenate([s.X.reshape(-1), w_norm])
+
+    @property
+    def state_dim(self) -> int:
+        return self.N * self.M + self.envelope.max_spouts
+
+    @property
+    def action_dim(self) -> int:
+        return self.N * self.M
+
+    # -- core API ----------------------------------------------------------
+    def reset(self, key: jax.Array, params: GraphEnvParams | None = None,
+              X0: jnp.ndarray | None = None) -> EnvState:
+        p = self.default_params() if params is None else params
+        X = self.round_robin_assignment() if X0 is None else X0
+        return EnvState(
+            X=X * p.node_mask[:, None],   # padded executors: zero rows
+            w=p.base_rates,
+            epoch=jnp.zeros((), jnp.int32),
+            speed=p.speed,
+        )
+
+    def evaluate(self, X: jnp.ndarray, w: jnp.ndarray,
+                 speed: jnp.ndarray | None = None,
+                 params: GraphEnvParams | None = None) -> jnp.ndarray:
+        """Noise-free steady-state latency (ms); X is masked internally, so
+        an unmasked round-robin assignment scores correctly per lane."""
+        p = self.default_params() if params is None else params
+        return graph_latency_ms(X, w, p, self.cluster, speed=speed)
+
+    def step(self, key: jax.Array, s: EnvState, action: jnp.ndarray,
+             params: GraphEnvParams | None = None) -> StepOut:
+        p = self.default_params() if params is None else params
+        k_noise, k_w = jax.random.split(key)
+        action = action * p.node_mask[:, None]
+        moved = ((jnp.abs(action - s.X).sum(-1) > 0) * p.node_mask).sum()
+        lat = measured_graph_latency_ms(k_noise, action, s.w, p, self.cluster,
+                                        speed=s.speed)
+        w_next = step_rates(k_w, s.w, s.epoch, p.base_rates, p.rate_jitter,
+                            p.rate_revert, p.shift_epoch, p.shift_factor)
+        nxt = EnvState(X=action, w=w_next, epoch=s.epoch + 1, speed=s.speed)
+        return StepOut(state=nxt, reward=-lat, latency_ms=lat, moved=moved)
+
+    def reset_fleet(self, keys: jax.Array, X0: jnp.ndarray | None = None,
+                    speed_factors: jnp.ndarray | None = None,
+                    params: GraphEnvParams | None = None) -> EnvState:
+        """Stacked initial states ([F] leading axis); ``params`` may be a
+        single GraphEnvParams or a stacked structural fleet."""
+        p = self.default_params() if params is None else params
+        axes = params_in_axes(p, self.default_params())
+        if axes is not None:
+            states = jax.vmap(lambda k, pp: self.reset(k, pp, X0=X0),
+                              in_axes=(0, axes))(keys, p)
+        else:
+            states = jax.vmap(lambda k: self.reset(k, p, X0=X0))(keys)
+        if speed_factors is not None:
+            states = states._replace(
+                speed=jnp.asarray(speed_factors, jnp.float32))
+        return states

@@ -17,7 +17,7 @@ arrival rates, fully determines the steady-state tuple flow."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import numpy as np
 
@@ -25,6 +25,30 @@ SHUFFLE = "shuffle"
 FIELDS = "fields"
 GLOBAL = "global"
 ALL = "all"
+
+
+class GraphObs(NamedTuple):
+    """Padded/masked executor-graph observation of one topology.
+
+    Node arrays have length ``max_execs``; edge arrays length ``max_edges``.
+    Padded edges point at the *sacrificial* node index ``max_execs`` (one past
+    the last real slot): a segment-sum over ``max_execs + 1`` segments routes
+    their (zero-weight) contributions into a segment that is sliced away, so
+    real-node aggregates are bit-identical across padding envelopes.
+    """
+
+    service_ms: np.ndarray    # [max_execs] CPU demand per tuple (0 on padding)
+    tuple_bytes: np.ndarray   # [max_execs] emitted tuple size (0 on padding)
+    is_spout: np.ndarray      # [max_execs] 1.0 on spout executors
+    out_mass: np.ndarray      # [max_execs] row sum of R (selectivity x fan-out)
+    in_mass: np.ndarray       # [max_execs] column sum of R
+    node_mask: np.ndarray     # [max_execs] 1.0 on real executors
+    edge_src: np.ndarray      # [max_edges] int32; padded entries = max_execs
+    edge_dst: np.ndarray      # [max_edges] int32; padded entries = max_execs
+    edge_w: np.ndarray        # [max_edges] R[src, dst]; 0.0 on padding
+    edge_mask: np.ndarray     # [max_edges] 1.0 on real edges
+    num_executors: int        # real executor count (<= max_execs)
+    num_edges: int            # real edge count (<= max_edges)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +188,58 @@ class Topology:
         for c in self.components:
             out[list(self.executor_slice(c.name))] = c.tuple_bytes
         return out
+
+    def to_graph_obs(self, max_execs: int, max_edges: int, seed: int = 0) -> GraphObs:
+        """Executor-graph observation padded to a ``(max_execs, max_edges)``
+        envelope.
+
+        Edges are the nonzero entries of ``routing_matrix(seed)`` in row-major
+        order (so the real-edge prefix is identical at every envelope).  Raises
+        ``ValueError`` when the topology does not fit the envelope — padding
+        must never silently truncate structure."""
+        n = self.num_executors
+        R = self.routing_matrix(seed)
+        src, dst = np.nonzero(R)
+        e = len(src)
+        if n > max_execs or e > max_edges:
+            raise ValueError(
+                f"topology {self.name} exceeds graph envelope: "
+                f"{n} executors / {e} edges vs max_execs={max_execs} / "
+                f"max_edges={max_edges}"
+            )
+
+        def pad_nodes(x: np.ndarray) -> np.ndarray:
+            out = np.zeros(max_execs, dtype=np.float32)
+            out[:n] = x
+            return out
+
+        is_spout = np.zeros(n, dtype=np.float32)
+        is_spout[self.spout_executors] = 1.0
+        node_mask = pad_nodes(np.ones(n, dtype=np.float32))
+        # sacrificial index max_execs on padded edges; gather clamps it,
+        # scatter routes it into the discarded extra segment
+        edge_src = np.full(max_edges, max_execs, dtype=np.int32)
+        edge_dst = np.full(max_edges, max_execs, dtype=np.int32)
+        edge_w = np.zeros(max_edges, dtype=np.float32)
+        edge_mask = np.zeros(max_edges, dtype=np.float32)
+        edge_src[:e] = src
+        edge_dst[:e] = dst
+        edge_w[:e] = R[src, dst]
+        edge_mask[:e] = 1.0
+        return GraphObs(
+            service_ms=pad_nodes(self.service_demand_ms()),
+            tuple_bytes=pad_nodes(self.tuple_bytes()),
+            is_spout=pad_nodes(is_spout),
+            out_mass=pad_nodes(R.sum(axis=1)),
+            in_mass=pad_nodes(R.sum(axis=0)),
+            node_mask=node_mask,
+            edge_src=edge_src,
+            edge_dst=edge_dst,
+            edge_w=edge_w,
+            edge_mask=edge_mask,
+            num_executors=n,
+            num_edges=e,
+        )
 
     def describe(self) -> str:
         lines = [f"topology {self.name}: {self.num_executors} executors"]

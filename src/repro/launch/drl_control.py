@@ -42,6 +42,8 @@ freed lanes refilled), writing the ranked leaderboard to
       --fleet 8 --sharded --checkpoint-dir /tmp/fleet_ck --resume
   PYTHONPATH=src python -m repro.launch.drl_control --app cq_small \
       --scenario-search --fleet 8 --search-rungs 16,16,32
+  PYTHONPATH=src python -m repro.launch.drl_control --app structural \
+      --agent graph_policy --scenario dag_shapes --fleet 6
 """
 from __future__ import annotations
 
@@ -67,7 +69,8 @@ from repro.core import (agent_names, jamba_placement_env, make_agent,
 from repro.core import ddpg as ddpg_lib
 from repro.core.placement import PLACEMENT_SCENARIOS
 from repro.checkpoint.fleet import FleetCheckpoint
-from repro.dsdps import SchedulingEnv, apps, lane_params, scenarios
+from repro.dsdps import (SchedulingEnv, StructuralSchedulingEnv, apps,
+                         lane_params, scenarios)
 from repro.dsdps.apps import default_workload
 from repro.sharding.fleet import fleet_size
 
@@ -75,6 +78,10 @@ from repro.sharding.fleet import fleet_size
 def build_env(app: str):
     if app == "placement":
         return jamba_placement_env()
+    if app == "structural":
+        # chain / diamond / wide-fanout padded into one envelope: the
+        # DAG-shape fleet (--scenario dag_shapes varies topology per lane)
+        return StructuralSchedulingEnv(apps.structural_topologies())
     topo = apps.ALL_APPS[app]()
     return SchedulingEnv(topo, default_workload(topo))
 
@@ -82,15 +89,22 @@ def build_env(app: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="cq_small",
-                    choices=list(apps.ALL_APPS) + ["placement"])
+                    choices=list(apps.ALL_APPS) + ["placement", "structural"],
+                    help="one Storm topology, the TPU expert-placement env, "
+                         "or 'structural' — the envelope-padded DAG-shape "
+                         "env over apps.STRUCTURAL_APPS (pairs with "
+                         "--agent graph_policy / --scenario dag_shapes)")
     ap.add_argument("--agent", default="ddpg", choices=list(agent_names()),
                     help="registered control policy (core.api.make_agent)")
     ap.add_argument("--scenario", default=None,
                     choices=sorted(set(scenarios.SCENARIOS)
+                                   | set(scenarios.STRUCTURAL_SCENARIOS)
                                    | set(PLACEMENT_SCENARIOS)),
                     help="heterogeneous params fleet instead of a pure "
                          "seed sweep (EnvParams for DSDPS apps, "
-                         "PlacementParams for --app placement)")
+                         "PlacementParams for --app placement; the "
+                         "structure-varying dag_shapes needs "
+                         "--app structural)")
     ap.add_argument("--broadcast-invariant", action="store_true",
                     help="keep scenario-invariant params leaves single-copy "
                          "(per-leaf in_axes=None broadcast in the vmap)")
@@ -179,6 +193,9 @@ def main() -> None:
     if args.agent == "model_based" and args.app == "placement":
         ap.error("model_based profiles a DSDPS cluster; use it with the "
                  "Storm apps")
+    if args.agent == "graph_policy" and args.app == "placement":
+        ap.error("graph_policy message-passes over a topology DAG; use it "
+                 "with the Storm apps or --app structural")
     if args.agent in ("rate_control", "auto_tune"):
         ap.error(f"{args.agent} is a serving-side decision policy (its "
                  f"actions are not placements) — it runs behind the "

@@ -120,6 +120,14 @@ class ShardingPolicy:
             return P(None, None)
         if "lm_head" in path:
             return self._mm(shape, out_dim=-1, in_dim=-2)
+        if "gnn/" in path:
+            # graph-policy message-passing layers (core/graph_policy.py):
+            # matrices tensor-parallelize over the model axis — the first
+            # agent family where that axis is non-degenerate (the fleet's
+            # data axes carry lanes, so pass fsdp=False)
+            if len(shape) >= 2:
+                return self._mm(shape, out_dim=-1, in_dim=-2)
+            return self._vec(shape)
         if path.endswith("/b"):
             return self._vec(shape)
         if "norm" in path or "ln_x" in path:

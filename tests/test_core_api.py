@@ -328,7 +328,8 @@ def test_named_scenarios_build_and_differ(small_env):
 # Registry: every agent runs end-to-end through the same fleet runner
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("name", ["ddpg", "dqn", "round_robin",
-                                  "model_based", "stream_q", "stream_ac"])
+                                  "model_based", "stream_q", "stream_ac",
+                                  "graph_policy"])
 def test_registry_agent_runs_five_epochs(small_env, name):
     env = small_env
     overrides = {"model_based": {"fit_samples": 40},
@@ -346,7 +347,7 @@ def test_registry_agent_runs_five_epochs(small_env, name):
 def test_registry_lists_builtins_and_rejects_unknown(small_env):
     names = agent_names()
     for expected in ("ddpg", "dqn", "round_robin", "model_based",
-                     "stream_q", "stream_ac"):
+                     "stream_q", "stream_ac", "graph_policy"):
         assert expected in names
     with pytest.raises(KeyError):
         make_agent("nope", small_env)
@@ -381,6 +382,8 @@ def test_registry_completeness_on_both_env_families(small_env):
     for name in ("ddpg", "dqn", "round_robin", "stream_q", "stream_ac"):
         assert set(agent_families(name)) == {"scheduling", "placement"}
     assert agent_families("model_based") == ("scheduling",)
+    # graph_policy message-passes over a topology DAG — scheduling only
+    assert agent_families("graph_policy") == ("scheduling",)
     assert agent_families("rate_control") == ()
     assert agent_families("auto_tune") == ()
     with pytest.raises(KeyError):

@@ -1,0 +1,222 @@
+"""graph_policy + StructuralSchedulingEnv: the padding-exactness and
+structure-as-data contracts.
+
+What makes the structural fleet trustworthy is that padding is INERT —
+not approximately, bit-for-bit:
+
+  * the same topology padded into a larger envelope yields identical
+    network params (shapes depend only on per-node widths), identical
+    greedy moves, and identical evaluated latency;
+  * the envelope-padded latency model agrees with the plain
+    ``SchedulingEnv`` model on the same topology;
+  * a structural fleet lane bit-matches the equivalent single run
+    (the lane-bitmatch pattern from tests/test_fleet_runner.py);
+  * one XLA program serves every DAG shape: two fleet runs over three
+    heterogeneous topologies compile the fleet program exactly once;
+  * a too-small envelope raises a ValueError naming the topology —
+    never a silently truncated observation (the ``build_for``
+    envelope-aware dispatch regression).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import make_agent, run_online_agent, run_online_fleet
+from repro.core.graph_policy import graph_param_specs
+from repro.dsdps import SchedulingEnv, apps, scenarios
+from repro.dsdps.apps import default_workload
+from repro.dsdps.simulator import lane_params
+from repro.dsdps.structural import Envelope, StructuralSchedulingEnv
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return apps.continuous_queries("small")
+
+
+@pytest.fixture(scope="module")
+def tight_env(topo):
+    return StructuralSchedulingEnv([topo])     # auto (exact) envelope
+
+
+@pytest.fixture(scope="module")
+def padded_env(topo):
+    return StructuralSchedulingEnv(
+        [topo], envelope=Envelope(max_execs=29, max_edges=151, max_spouts=5,
+                                  max_components=8))
+
+
+@pytest.fixture(scope="module")
+def structural_env():
+    return StructuralSchedulingEnv(apps.structural_topologies())
+
+
+# -- padding invariance ------------------------------------------------------
+def test_init_params_identical_across_envelopes(tight_env, padded_env):
+    """Param shapes depend only on per-node feature widths, so the same
+    key draws the same network at ANY envelope."""
+    a_t = make_agent("graph_policy", tight_env)
+    a_p = make_agent("graph_policy", padded_env)
+    st_t = a_t.init(jax.random.PRNGKey(0))
+    st_p = a_p.init(jax.random.PRNGKey(0))
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y),
+                 st_t.qnet, st_p.qnet)
+
+
+def test_greedy_select_bit_invariant_under_padding(tight_env, padded_env,
+                                                   topo):
+    a_t = make_agent("graph_policy", tight_env)
+    a_p = make_agent("graph_policy", padded_env)
+    st_t = a_t.init(jax.random.PRNGKey(0))
+    st_p = a_p.init(jax.random.PRNGKey(0))
+    p_t, p_p = tight_env.default_params(), padded_env.default_params()
+    e_t = tight_env.reset(jax.random.PRNGKey(1), p_t)
+    e_p = padded_env.reset(jax.random.PRNGKey(1), p_p)
+    key = jax.random.PRNGKey(2)
+    act_t, aux_t = a_t.select(key, st_t, tight_env.state_vector(e_t, p_t),
+                              e_t, p_t, explore=False)
+    act_p, aux_p = a_p.select(key, st_p, padded_env.state_vector(e_p, p_p),
+                              e_p, p_p, explore=False)
+    n = topo.num_executors
+    # the flat move index i*M + j is envelope-independent (row-major over
+    # real executors), so greedy moves agree bit-for-bit
+    assert int(aux_t[0]) == int(aux_p[0])
+    np.testing.assert_array_equal(np.asarray(act_t[:n]),
+                                  np.asarray(act_p[:n]))
+    assert (np.asarray(act_p[n:]) == 0.0).all()
+
+
+def test_padded_latency_matches_plain_env(topo, tight_env, padded_env):
+    plain = SchedulingEnv(topo, default_workload(topo))
+    X = plain.round_robin_assignment()
+    w = jnp.asarray(plain.workload.init())
+    ref = float(plain.evaluate(X, w))
+    for env in (tight_env, padded_env):
+        n, s = topo.num_executors, len(topo.spout_executors)
+        X_pad = jnp.zeros((env.N, env.M)).at[:n].set(X)
+        w_pad = jnp.zeros((env.envelope.max_spouts,)).at[:s].set(w)
+        np.testing.assert_allclose(float(env.evaluate(X_pad, w_pad)), ref,
+                                   rtol=1e-6)
+
+
+def test_structural_default_params_reject_too_small_envelope(topo):
+    small = StructuralSchedulingEnv(
+        [topo], envelope=Envelope(max_execs=topo.num_executors - 1,
+                                  max_edges=500, max_spouts=4,
+                                  max_components=6))
+    with pytest.raises(ValueError, match=topo.name):
+        small.params_for(topo)
+
+
+def test_dag_shapes_scenario_requires_structural_env(topo):
+    plain = SchedulingEnv(topo, default_workload(topo))
+    with pytest.raises(TypeError, match="StructuralSchedulingEnv"):
+        scenarios.build_for(plain, "dag_shapes", 3)
+
+
+# -- the structural fleet ----------------------------------------------------
+def test_structural_fleet_lane_bitmatch(structural_env):
+    """Fleet lane i over DAG i bit-matches the single run with the same
+    key, state, and params lane — padding and heterogeneous structure
+    change nothing about the trajectory."""
+    env = structural_env
+    F, T = 3, 5
+    params = scenarios.build_for(env, "dag_shapes", F)
+    agent = make_agent("graph_policy", env)
+    states = agent.init_fleet(jax.random.PRNGKey(0), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    _, hist = run_online_fleet(keys, env, agent, states, T=T,
+                               env_params=params)
+    assert np.asarray(hist.rewards).shape == (F, T)
+    for i in range(F):
+        st_i = jax.tree.map(lambda x, i=i: x[i], states)
+        lane_p = lane_params(params, env.default_params(), i)
+        _, h1 = run_online_agent(keys[i], env, agent, st_i, T=T,
+                                 env_params=lane_p)
+        np.testing.assert_array_equal(np.asarray(hist.rewards[i]),
+                                      np.asarray(h1.rewards))
+        np.testing.assert_array_equal(np.asarray(hist.latencies[i]),
+                                      np.asarray(h1.latencies))
+        np.testing.assert_array_equal(np.asarray(hist.moved[i]),
+                                      np.asarray(h1.moved))
+        np.testing.assert_array_equal(np.asarray(hist.final_assignment[i]),
+                                      np.asarray(h1.final_assignment))
+
+
+def test_structural_fleet_compiles_once(structural_env):
+    """Two runs over three heterogeneous DAG shapes: ONE fleet-program
+    compile — topology structure rides as traced GraphEnvParams leaves,
+    not static shapes."""
+    from repro.core import agent as agent_mod
+    from repro.diagnostics import guards
+    env = structural_env
+    F, T = 3, 4
+    params = scenarios.build_for(env, "dag_shapes", F)
+    agent = make_agent("graph_policy", env)
+    states = agent.init_fleet(jax.random.PRNGKey(0), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    with guards(track=(agent_mod._fleet_program,),
+                label="test_graph_compile_once") as g:
+        run_online_fleet(keys, env, agent, states, T=T, env_params=params)
+        run_online_fleet(keys, env, agent, states, T=T, env_params=params)
+    assert g.counter.compiles == 1
+
+
+def test_structural_fleet_on_host_mesh_bitmatches_vmap(structural_env):
+    env = structural_env
+    F, T = 3, 4
+    params = scenarios.build_for(env, "dag_shapes", F)
+    agent = make_agent("graph_policy", env)
+    states = agent.init_fleet(jax.random.PRNGKey(0), F, env_params=params,
+                              env=env)
+    keys = jax.random.split(jax.random.PRNGKey(1), F)
+    _, h_vmap = run_online_fleet(keys, env, agent, states, T=T,
+                                 env_params=params)
+    _, h_mesh = run_online_fleet(keys, env, agent, states, T=T,
+                                 env_params=params, mesh=make_host_mesh())
+    np.testing.assert_array_equal(np.asarray(h_vmap.rewards),
+                                  np.asarray(h_mesh.rewards))
+
+
+def test_structural_env_moved_ignores_padded_rows(structural_env):
+    """`moved` counts real executors only: flipping a padded row of the
+    action must not register as a move (and must not change latency)."""
+    env = structural_env
+    topo = env.topologies[1]                       # diamond: n < envelope
+    p = env.params_for(topo)
+    n = topo.num_executors
+    assert n < env.N
+    state = env.reset(jax.random.PRNGKey(0), p)
+    action = state.X.at[n, 0].set(1.0)             # "move" a padded exec
+    key = jax.random.PRNGKey(1)
+    out_pad = env.step(key, state, action, p)
+    out_same = env.step(key, state, state.X, p)
+    assert float(out_pad.moved) == 0.0
+    np.testing.assert_array_equal(np.asarray(out_pad.latency_ms),
+                                  np.asarray(out_same.latency_ms))
+
+
+# -- sharding: the first non-degenerate "model"-axis agent -------------------
+def test_graph_param_specs_partition_gnn_over_model_axis():
+    topo = apps.continuous_queries("small")
+    env = StructuralSchedulingEnv([topo])
+    agent = make_agent("graph_policy", env)
+    state = agent.init(jax.random.PRNGKey(0))
+    specs = graph_param_specs(state.qnet, make_host_mesh())
+    gnn = specs["gnn"]
+    # matrices tensor-parallelize over "model"; bias vectors too (the
+    # head's out dim is n_machines); nothing shards over the data axes
+    assert gnn["enc"]["w"] == P(None, "model")
+    assert gnn["head"]["w"] == P(None, "model")
+    assert gnn["head"]["b"] == P("model")
+    for t in (0, 1):
+        for k in ("self", "fwd", "bwd"):
+            assert gnn[f"mp{t}"][k]["w"] == P(None, "model")
+    for spec in jax.tree.leaves(specs,
+                                is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in jax.tree.leaves(spec)

@@ -38,6 +38,7 @@ _EXTERNAL = ("http://", "https://", "mailto:")
 EXECUTABLE_DOCS = (
     "README.md",
     "docs/elastic_fleets.md",
+    "docs/graph_policies.md",
     "docs/serving.md",
     "docs/sharded_fleets.md#multi-host-fleets",
     "docs/streaming_agents.md",
